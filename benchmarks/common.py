@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: result IO, argument scaling."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def save_result(name: str, payload: dict[str, Any]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return os.path.normpath(path)
+
+
+def run_with_devices(module: str, num_devices: int, timeout: int = 1200, smoke: bool = False) -> str:
+    """Run ``python -m <module>`` in a subprocess with N forced host devices
+    (the device count is locked at jax init, so multi-device benchmarks need
+    their own process)."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         os.path.join(os.path.dirname(__file__), ".."),
+         env.get("PYTHONPATH", "")]
+    )
+    cmd = [sys.executable, "-m", module] + (["--smoke"] if smoke else [])
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"{module} failed:\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+    return r.stdout

@@ -1,0 +1,90 @@
+"""Paper Figure 2: time to update one item vs number of ratings.
+
+Paper methods -> this repo (TPU/SPMD adaptation, DESIGN.md §2):
+  * sequential rank-one update  -> per-item naive update (posterior.update_item_naive)
+  * sequential Cholesky         -> single-item bucket (B=1) batched update
+  * parallel Cholesky           -> bucketed batch update amortized per item
+                                   (many items of the same pad class at once —
+                                   the SPMD replacement for splitting one huge
+                                   item across threads)
+
+The fitted (fixed, per_rating) cost model parameterizes core/balance.py —
+the same Figure-2-driven methodology the paper uses for load balancing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core import posterior
+from repro.core.balance import fit_cost_model
+from repro.core.types import Bucket, HyperParams
+from repro.utils import timeit
+
+
+def _bucket_for(nnz: int, num_items: int, num_opposite: int, K: int, seed: int = 0) -> Bucket:
+    rng = np.random.default_rng(seed)
+    pad = max(8, 1 << int(np.ceil(np.log2(max(nnz, 1)))))
+    nbr = rng.integers(0, num_opposite, size=(num_items, pad), dtype=np.int32)
+    val = rng.normal(size=(num_items, pad)).astype(np.float32)
+    val[:, nnz:] = 0.0
+    return Bucket(
+        item_ids=jnp.arange(num_items, dtype=jnp.int32),
+        nbr=jnp.asarray(nbr),
+        val=jnp.asarray(val),
+        nnz=jnp.full((num_items,), nnz, jnp.int32),
+    )
+
+
+def run(smoke: bool = False) -> dict:
+    K = 16 if smoke else 32
+    num_opposite = 2_000
+    nnz_grid = [8, 32, 128, 512] if smoke else [8, 16, 32, 64, 128, 256, 512, 1024, 2048]
+    iters = 3 if smoke else 10
+    key = jax.random.key(0)
+    X = jax.random.normal(key, (num_opposite, K), jnp.float32)
+    hyper = HyperParams.init(K)
+    X_side1 = jnp.zeros((1, K), jnp.float32)
+
+    naive = jax.jit(
+        lambda nbr, val: posterior.update_item_naive(key, 0, nbr, val, X, hyper, 2.0)
+    )
+    upd1 = jax.jit(
+        lambda b: posterior.update_bucket(key, X_side1, X, b, hyper, 2.0, jnp.float32, False)
+    )
+
+    rows: list[dict] = []
+    B = 64
+    X_sideB = jnp.zeros((B, K), jnp.float32)
+    updB = jax.jit(
+        lambda b: posterior.update_bucket(key, X_sideB, X, b, hyper, 2.0, jnp.float32, False)
+    )
+    rng = np.random.default_rng(1)
+    for nnz in nnz_grid:
+        nbr = jnp.asarray(rng.integers(0, num_opposite, size=nnz, dtype=np.int32))
+        val = jnp.asarray(rng.normal(size=nnz).astype(np.float32))
+        t_naive = timeit(naive, nbr, val, iters=iters)
+        t_single = timeit(upd1, _bucket_for(nnz, 1, num_opposite, K), iters=iters)
+        t_batch = timeit(updB, _bucket_for(nnz, B, num_opposite, K), iters=iters) / B
+        rows.append({"nnz": nnz, "t_naive_s": t_naive, "t_single_chol_s": t_single,
+                     "t_batched_per_item_s": t_batch})
+
+    nnzs = np.array([r["nnz"] for r in rows], dtype=np.float64)
+    tb = np.array([r["t_batched_per_item_s"] for r in rows])
+    cm = fit_cost_model(nnzs, tb * 1e6)  # microseconds => well-scaled coefficients
+    out = {
+        "rows": rows,
+        "cost_model": {"fixed_us": cm.fixed, "per_rating_us": cm.per_rating},
+        "batched_speedup_at_min_nnz": rows[0]["t_single_chol_s"] / max(rows[0]["t_batched_per_item_s"], 1e-12),
+    }
+    save_result("fig2_item_update", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    for row in r["rows"]:
+        print({k: (f"{v:.2e}" if isinstance(v, float) else v) for k, v in row.items()})
+    print("cost model:", r["cost_model"])

@@ -1,0 +1,75 @@
+"""Paper Figure 4: distributed strong scaling — updates/s vs node count.
+
+Runs the distributed Gibbs sampler over ring meshes of 1/2/4/8 forced host
+devices (subsets of one 8-device process) on an ml-100k-shaped synthetic and
+reports updates (user+movie resamples) per second, for both comm modes:
+
+  * ring      — the paper's async pipelined version (ppermute overlap)
+  * allgather — the synchronous GraphLab-like baseline
+
+The paper's >32-node degradation (BlueGene rack boundary) corresponds here
+to the pod boundary; the projection to 256/512 chips comes from the dry-run
+roofline terms (benchmarks/roofline.py), not wall time.
+
+Run me via: python -m benchmarks.fig4_scaling (inside an
+XLA_FLAGS=--xla_force_host_platform_device_count=8 process; benchmarks.run
+does this automatically).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.distributed import build_distributed_data, make_ring_mesh, run_distributed
+from repro.core.types import BPMFConfig
+from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+
+
+def run(smoke: bool = False) -> dict:
+    spec = SyntheticSpec(
+        num_users=600 if smoke else 3_000,
+        num_movies=300 if smoke else 900,
+        nnz=8_000 if smoke else 90_000,
+        discretize=False,
+    )
+    coo, _ = synthetic_ratings(spec)
+    K = 8 if smoke else 16
+    sweeps = 2 if smoke else 5
+    devices = jax.devices()
+    widths = [w for w in (1, 2, 4, 8) if w <= len(devices)]
+
+    results: dict = {"widths": widths, "modes": {}}
+    for mode in ("ring", "allgather"):
+        rows = []
+        for w in widths:
+            cfg = BPMFConfig(K=K, num_sweeps=sweeps, burn_in=1, comm_mode=mode)
+            data, _plan = build_distributed_data(coo, num_shards=w, seed=0)
+            mesh = make_ring_mesh(devices[:w])
+            t0 = time.time()  # includes first-sweep compile; subtract below
+            state, pred, hist = run_distributed(jax.random.key(0), data, cfg, mesh)
+            t_total = time.time() - t0
+            # steady-state: time sweeps after compile
+            t0 = time.time()
+            state, pred, hist = run_distributed(jax.random.key(1), data, cfg, mesh)
+            t_steady = time.time() - t0
+            ups = (coo.num_users + coo.num_movies) * sweeps / t_steady
+            rows.append({
+                "devices": w, "seconds": t_steady, "updates_per_s": ups,
+                "rmse_final": hist[-1].rmse_avg, "compile_plus_run_s": t_total,
+            })
+            print(f"[fig4] {mode} w={w}: {ups:,.0f} updates/s rmse={hist[-1].rmse_avg:.4f}")
+        base = rows[0]["updates_per_s"]
+        for r in rows:
+            r["speedup"] = r["updates_per_s"] / base
+        results["modes"][mode] = rows
+
+    save_result("fig4_scaling", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -1,0 +1,63 @@
+"""Paper Figure 5: time in compute / communication / both (overlap).
+
+Two complementary measurements:
+
+1. Wall-clock (this CPU host, 8 forced devices): sweep time for
+   comm_mode=ring (async, overlap-friendly) vs allgather (synchronous
+   barrier) at equal work — the ring/allgather gap IS the overlap the
+   paper's Isend/Irecv buys, since both move the same factor bytes.
+
+2. Roofline (TPU target, from the BPMF dry-run artifact): per ring step the
+   ICI time of one shard rotation vs the MXU time of one shard's gram
+   accumulation — overlap potential = min(comm, compute)/max(comm, compute).
+   Derived in EXPERIMENTS.md §Roofline from experiments/dryrun JSONs.
+
+Run inside an 8-device process (benchmarks.run handles this).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+from benchmarks.common import save_result
+from repro.core.distributed import build_distributed_data, make_ring_mesh, run_distributed
+from repro.core.types import BPMFConfig
+from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+
+
+def run(smoke: bool = False) -> dict:
+    spec = SyntheticSpec(
+        num_users=600 if smoke else 4_000,
+        num_movies=300 if smoke else 1_000,
+        nnz=8_000 if smoke else 120_000,
+        discretize=False,
+    )
+    coo, _ = synthetic_ratings(spec)
+    K = 8 if smoke else 32
+    sweeps = 2 if smoke else 6
+    devices = jax.devices()
+    w = min(8, len(devices))
+    mesh = make_ring_mesh(devices[:w])
+
+    out: dict = {"devices": w, "modes": {}}
+    for mode in ("ring", "allgather"):
+        cfg = BPMFConfig(K=K, num_sweeps=sweeps, burn_in=1, comm_mode=mode)
+        data, _ = build_distributed_data(coo, num_shards=w, seed=0)
+        run_distributed(jax.random.key(0), data, cfg, mesh)  # compile
+        t0 = time.time()
+        _, _, hist = run_distributed(jax.random.key(1), data, cfg, mesh)
+        t = time.time() - t0
+        out["modes"][mode] = {"seconds": t, "rmse": hist[-1].rmse_avg}
+        print(f"[fig5] {mode}: {t:.3f}s rmse={hist[-1].rmse_avg:.4f}")
+
+    ring_t = out["modes"]["ring"]["seconds"]
+    ag_t = out["modes"]["allgather"]["seconds"]
+    out["ring_vs_allgather_speedup"] = ag_t / ring_t
+    save_result("fig5_overlap", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -1,0 +1,27 @@
+"""Train a reduced assigned-architecture LM end-to-end (framework substrate).
+
+    PYTHONPATH=src python examples/lm_train.py --arch zamba2-2.7b --steps 60
+
+Uses the same train_step/launcher path the production mesh uses; see
+``python -m repro.launch.train --help`` for all knobs.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=60)
+    args, extra = ap.parse_known_args()
+    rc = train_main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64", *extra,
+    ])
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

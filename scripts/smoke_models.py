@@ -1,0 +1,47 @@
+"""Dev script: one fwd + train + prefill/decode per reduced arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import build_model
+from repro.training.optimizer import AdamW
+from repro.training.train import init_train_state, make_train_step
+
+B, L = 2, 64
+
+for arch in ARCHS if len(sys.argv) < 2 else sys.argv[1:]:
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    params = model.init(key)
+
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (B, L), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (B, L, cfg.frame_dim), jnp.bfloat16)
+    labels = jax.random.randint(key, (B, L), 0, cfg.vocab_size)
+    mask = jnp.ones((B, L), jnp.float32)
+
+    logits, metrics = jax.jit(model.forward)(params, inputs)
+    assert logits.shape == (B, L, cfg.padded_vocab), logits.shape
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN logits"
+
+    opt = AdamW(learning_rate=1e-3)
+    state = init_train_state(key, model, opt)
+    step = jax.jit(make_train_step(model, opt))
+    state, m = step(state, {"inputs": inputs, "labels": labels, "mask": mask})
+    assert not bool(jnp.isnan(m["loss"])), f"{arch}: NaN loss"
+
+    decode_info = "no-decode"
+    if not cfg.is_encoder:
+        cache = model.init_cache(B, L + 8)
+        lg, cache = jax.jit(model.prefill)(params, inputs[:, : L // 2], cache)
+        tok = jnp.argmax(lg[:, -1, :], -1)[:, None].astype(jnp.int32)
+        lg2, cache = jax.jit(model.decode)(params, tok, cache, jnp.asarray([L // 2], jnp.int32))
+        assert lg2.shape == (B, 1, cfg.padded_vocab)
+        assert not bool(jnp.any(jnp.isnan(lg2))), f"{arch}: NaN decode"
+        decode_info = "decode-ok"
+
+    print(f"[ok] {arch:18s} loss={float(m['loss']):.3f} {decode_info}")

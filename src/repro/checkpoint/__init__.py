@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]

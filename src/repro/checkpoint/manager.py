@@ -1,0 +1,86 @@
+"""Checkpoint manager: retention, async background writes, restore policy.
+
+The async writer runs ``save_checkpoint`` on a single worker thread after
+``jax.device_get`` has snapshotted the arrays (device_get happens on the
+caller thread so the training step can donate/overwrite buffers immediately
+— the classic overlap-checkpoint-IO-with-compute trick). ``wait()`` joins
+outstanding writes; retention prunes beyond ``keep``.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    _step_dir,
+)
+from repro.utils import logger
+
+Tree = Any
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_writes: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_writes else None
+        self._pending: list[Future] = []
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Tree) -> None:
+        """Snapshot now; write in background (if async)."""
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._pool is None:
+            save_checkpoint(self.directory, step, host_tree)
+            self._retain()
+        else:
+            self._pending = [f for f in self._pending if not f.done()]
+            fut = self._pool.submit(self._write, step, host_tree)
+            self._pending.append(fut)
+
+    def _write(self, step: int, host_tree: Tree) -> None:
+        try:
+            save_checkpoint(self.directory, step, host_tree)
+            self._retain()
+        except Exception:  # pragma: no cover - logged, not raised into the pool
+            logger.exception("async checkpoint write for step %d failed", step)
+
+    def wait(self) -> None:
+        for f in self._pending:
+            f.result()
+        self._pending.clear()
+
+    # ------------------------------------------------------------------
+    def restore(self, target: Tree, step: Optional[int] = None, mesh=None, shardings=None) -> Tree:
+        self.wait()
+        return restore_checkpoint(self.directory, target, step, mesh, shardings)
+
+    def latest(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.directory)
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and ".tmp" not in name:
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)
+
+    def close(self) -> None:
+        self.wait()
+        if self._pool is not None:
+            self._pool.shutdown()

@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, SHAPES, get_config, list_archs, runnable_cells
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "list_archs", "runnable_cells"]

@@ -1,0 +1,24 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP [arXiv:2402.16819].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000. At 340B params the
+bf16-param + bf16-moment optimizer path (optimizer.py) is what fits the
+16 GB/chip v5e budget on a 256-chip pod — see EXPERIMENTS.md §Dry-run.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    num_layers=96,
+    d_model=18432,
+    d_ff=73728,
+    vocab_size=256000,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=192,
+    attention="gqa",
+    mlp="relu2",
+    norm="layernorm",
+    param_dtype="bfloat16",
+    remat_group=8,  # 96 x [1, 4096, 18432] residual carries alone are 14.5 GB
+)

@@ -1,0 +1,78 @@
+"""Architecture + shape registry: the assigned (arch x shape) grid.
+
+``runnable_cells()`` applies the DESIGN.md §5 skip rules:
+  * ``long_500k`` needs sub-quadratic attention — runs only for ssm/hybrid
+    archs and SWA archs (mixtral's rolling window); skipped for pure
+    full-attention archs.
+  * encoder-only archs (hubert) have no decode step — decode shapes skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "yi-6b": "repro.configs.yi_6b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {', '.join(ARCHS)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS
+
+
+def cell_runnable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable?, reason-if-not). The skip rules of DESIGN.md §5."""
+    if shape.kind == "decode" and cfg.is_encoder:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k":
+        if cfg.is_encoder:
+            return False, "encoder-only arch has no decode step"
+        if not cfg.sub_quadratic:
+            return False, "quadratic attention / unbounded KV at 524k is not deployable"
+    return True, ""
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = cell_runnable(cfg, shape)
+            if ok:
+                out.append((arch, shape.name))
+    return out

@@ -1,0 +1,14 @@
+"""BPMF core: the paper's contribution (Gibbs sampler + distribution)."""
+from repro.core.gibbs import gibbs_sweep, init_state, run
+from repro.core.types import BPMFConfig, BPMFData, BPMFState, Bucket, BucketedSide
+
+__all__ = [
+    "BPMFConfig",
+    "BPMFData",
+    "BPMFState",
+    "Bucket",
+    "BucketedSide",
+    "gibbs_sweep",
+    "init_state",
+    "run",
+]

@@ -1,0 +1,577 @@
+"""Distributed BPMF Gibbs sampling (paper §IV) via ``shard_map``.
+
+The paper distributes U and V across MPI ranks, balances work with a
+cost-model-driven reorder of R, and overlaps communication with computation
+using buffered MPI_Isend/Irecv. The TPU-native mapping (DESIGN.md §2, §4):
+
+  * ranks            -> devices along one flattened mesh axis ("ring")
+  * R reordering     -> `balance.partition_items` relabeling; shard s owns the
+                        contiguous relabeled id range [s*cap, (s+1)*cap)
+  * Isend/Irecv +    -> `comm_mode="ring"`: `lax.ppermute` rotates the
+    send buffers        opposite-side factor shard around the ring while the
+                        current shard's Gram contribution computes (the
+                        permute for step t+1 is issued before step t's
+                        compute so XLA's scheduler overlaps ICI and MXU)
+  * synchronous      -> `comm_mode="allgather"`: one all-gather of the full
+    baseline            opposite factor, then local updates (GraphLab-like)
+
+Correctness contract: for identical (key, data), every comm_mode and every
+shard count draws the *same* posterior samples as the sequential
+``core.gibbs`` sampler, up to float reduction order — per-item noise is keyed
+by original item id (`posterior.item_noise`) and hyper-parameter sampling
+consumes psum'd sufficient statistics with a shared key. This turns the
+paper's "all versions reach the same RMSE" claim (§V-B) into an exact test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import posterior
+from repro.core.balance import CostModel, Partition, partition_items
+from repro.core.gibbs import SweepMetrics, sweep_keys
+from repro.core.hyper import hyper_sufficient_stats, sample_hyper_from_stats
+from repro.core.prediction import PredictionState, rmse
+from repro.core.types import BPMFConfig, Bucket, HyperParams
+from repro.data.sparse import RatingsCOO, csr_from_coo, train_test_split
+from repro.utils import pytree_dataclass, static_field
+
+RING_AXIS = "ring"
+
+
+# --------------------------------------------------------------------------
+# Distributed data containers
+# --------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class RingSide:
+    """Neighbor lists for updating one side, laid out for the ring schedule.
+
+    ``steps[t]`` holds the buckets for ring step t: the contributions to each
+    local item's Gram terms from opposite-side items owned by shard
+    ``(d - t) mod S`` (which is exactly the shard resident in device d's
+    buffer at step t). Every bucket array has a flat leading axis ``S * B``
+    sharded along the ring; neighbor indices are *local to the source shard*.
+
+    ``Bucket.item_ids`` here are LOCAL row ids into the [cap, K] shard
+    (pad = -1); original item ids (for layout-independent noise) live in
+    ``orig_ids``.
+    """
+
+    steps: tuple[tuple[Bucket, ...], ...]
+    orig_ids: jax.Array  # [S * cap] int32 original item id per slot, -1 = pad
+    cap: int = static_field(default=0)
+    num_items: int = static_field(default=0)
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+
+@pytree_dataclass
+class DistTestSet:
+    """Held-out triples in *relabeled* coordinates, replicated."""
+
+    rows: jax.Array  # [T] int32 relabeled user slot (shard*cap_u + row)
+    cols: jax.Array  # [T] int32 relabeled movie slot
+    vals: jax.Array  # [T] f32
+
+
+@pytree_dataclass
+class DistBPMFData:
+    """Everything the distributed sweep needs besides the factor shards."""
+
+    users: RingSide  # for updating U (neighbors: movies)
+    movies: RingSide  # for updating V (neighbors: users)
+    test: DistTestSet
+    mean_rating: jax.Array
+    num_shards: int = static_field(default=1)
+    min_rating: float = static_field(default=-np.inf)
+    max_rating: float = static_field(default=np.inf)
+
+
+@pytree_dataclass
+class DistState:
+    """Sharded Gibbs state. U: [S*cap_u, K], V: [S*cap_v, K] (ring-sharded)."""
+
+    U: jax.Array
+    V: jax.Array
+    hyper_U: HyperParams
+    hyper_V: HyperParams
+    sweep: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Host-side record of how the problem was partitioned (static)."""
+
+    part_users: Partition
+    part_movies: Partition
+    num_shards: int
+    strategy: str
+
+
+# --------------------------------------------------------------------------
+# Host-side data distribution (paper §IV-B)
+# --------------------------------------------------------------------------
+
+
+def _ring_side_buckets(
+    indptr: np.ndarray,
+    indices: np.ndarray,  # already relabeled opposite-side ids
+    values: np.ndarray,
+    part_self: Partition,
+    part_opp: Partition,
+    num_shards: int,
+    pads: Sequence[int],
+    bucket_multiple: int = 8,
+) -> RingSide:
+    """Build the per-step bucketed neighbor lists for one side.
+
+    For item i (owned by shard d at local row r) and ring step t, collect the
+    neighbors j with shard(j) == (d - t) mod S, store their *local* opposite
+    indices. Bucket shapes are agreed globally (max over devices per step &
+    pad class) so the SPMD program is identical on every device.
+    """
+    S = num_shards
+    cap = part_self.cap
+    cap_opp = part_opp.cap
+
+    # per (device, step): lists of (local_row, nbr_local[], val[])
+    per_dt: list[list[list[tuple[int, np.ndarray, np.ndarray]]]] = [
+        [[] for _ in range(S)] for _ in range(S)
+    ]
+    nnz_all = indptr[1:] - indptr[:-1]
+    for old_id in range(len(nnz_all)):
+        new_id = part_self.perm[old_id]
+        d, r = divmod(int(new_id), cap)
+        lo, hi = indptr[old_id], indptr[old_id + 1]
+        nbr_new = part_opp.perm[indices[lo:hi]]  # relabeled opposite ids
+        vals = values[lo:hi]
+        src_shard = nbr_new // cap_opp
+        local = nbr_new % cap_opp
+        for t in range(S):
+            o = (d - t) % S
+            sel = src_shard == o
+            if np.any(sel) or t == 0:
+                # t == 0 rows are always present so every item is sampled
+                per_dt[d][t].append((r, local[sel].astype(np.int64), vals[sel]))
+
+    pads_sorted = sorted(pads)
+
+    def pad_class(n: int) -> int:
+        for p in pads_sorted:
+            if n <= p:
+                return p
+        # beyond the largest configured pad: next power of two
+        p = pads_sorted[-1]
+        while p < n:
+            p *= 2
+        return p
+
+    steps: list[tuple[Bucket, ...]] = []
+    for t in range(S):
+        # global bucket plan: per pad class, B = max over devices
+        counts: dict[int, int] = {}
+        for d in range(S):
+            local_counts: dict[int, int] = {}
+            for _, nbr, _ in per_dt[d][t]:
+                pc = pad_class(len(nbr))
+                local_counts[pc] = local_counts.get(pc, 0) + 1
+            for pc, c in local_counts.items():
+                counts[pc] = max(counts.get(pc, 0), c)
+        buckets_t: list[Bucket] = []
+        for pc in sorted(counts):
+            B = -(-counts[pc] // bucket_multiple) * bucket_multiple
+            item_ids = np.full((S, B), -1, dtype=np.int32)
+            nbr = np.zeros((S, B, pc), dtype=np.int32)
+            val = np.zeros((S, B, pc), dtype=np.float32)
+            nnz = np.zeros((S, B), dtype=np.int32)
+            for d in range(S):
+                slot = 0
+                for r, nb, vl in per_dt[d][t]:
+                    if pad_class(len(nb)) != pc:
+                        continue
+                    item_ids[d, slot] = r
+                    nnz[d, slot] = len(nb)
+                    nbr[d, slot, : len(nb)] = nb
+                    val[d, slot, : len(nb)] = vl
+                    slot += 1
+            buckets_t.append(
+                Bucket(
+                    item_ids=jnp.asarray(item_ids.reshape(S * B)),
+                    nbr=jnp.asarray(nbr.reshape(S * B, pc)),
+                    val=jnp.asarray(val.reshape(S * B, pc)),
+                    nnz=jnp.asarray(nnz.reshape(S * B)),
+                )
+            )
+        steps.append(tuple(buckets_t))
+
+    orig = np.asarray(part_self.inv_perm, dtype=np.int32)  # [S*cap], -1 pads
+    return RingSide(
+        steps=tuple(steps),
+        orig_ids=jnp.asarray(orig),
+        cap=cap,
+        num_items=len(nnz_all),
+    )
+
+
+def build_distributed_data(
+    coo: RatingsCOO,
+    num_shards: int,
+    pads: Sequence[int] = (8, 32, 128, 512, 2048),
+    test_fraction: float = 0.1,
+    seed: int = 0,
+    strategy: str = "lpt",
+    cost_model: CostModel | None = None,
+    min_rating: float | None = None,
+    max_rating: float | None = None,
+) -> tuple[DistBPMFData, DistPlan]:
+    """Full host-side distribution pipeline (paper §IV-B).
+
+    Splits train/test, computes the cost-balanced partition of both sides,
+    relabels R accordingly and builds the per-ring-step neighbor lists.
+    """
+    train, test = train_test_split(coo, test_fraction, seed)
+    mean = float(train.vals.mean()) if train.nnz else 0.0
+    centered = train.vals - mean
+
+    u_indptr, u_idx, u_val = csr_from_coo(train.rows, train.cols, centered, coo.num_users)
+    m_indptr, m_idx, m_val = csr_from_coo(train.cols, train.rows, centered, coo.num_movies)
+
+    cm = cost_model or CostModel()
+    part_u = partition_items(
+        (u_indptr[1:] - u_indptr[:-1]).astype(np.int64), num_shards, cm, strategy
+    )
+    part_m = partition_items(
+        (m_indptr[1:] - m_indptr[:-1]).astype(np.int64), num_shards, cm, strategy
+    )
+
+    users = _ring_side_buckets(u_indptr, u_idx, u_val, part_u, part_m, num_shards, pads)
+    movies = _ring_side_buckets(m_indptr, m_idx, m_val, part_m, part_u, num_shards, pads)
+
+    lo = float(coo.vals.min()) if min_rating is None else min_rating
+    hi = float(coo.vals.max()) if max_rating is None else max_rating
+    data = DistBPMFData(
+        users=users,
+        movies=movies,
+        test=DistTestSet(
+            rows=jnp.asarray(part_u.perm[test.rows], jnp.int32),
+            cols=jnp.asarray(part_m.perm[test.cols], jnp.int32),
+            vals=jnp.asarray(test.vals, jnp.float32),
+        ),
+        mean_rating=jnp.asarray(mean, jnp.float32),
+        num_shards=num_shards,
+        min_rating=lo,
+        max_rating=hi,
+    )
+    return data, DistPlan(part_u, part_m, num_shards, strategy)
+
+
+# --------------------------------------------------------------------------
+# Device-side sweep (inside shard_map; everything here sees LOCAL shards)
+# --------------------------------------------------------------------------
+
+
+def _accumulate_buckets(
+    G: jax.Array,
+    g: jax.Array,
+    X_src: jax.Array,
+    buckets: tuple[Bucket, ...],
+    alpha: float,
+    compute_dtype,
+    use_pallas: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Add each bucket's Gram contribution into the per-local-item (G, g)."""
+    for b in buckets:
+        Gb, gb = posterior.gram_terms(X_src, b, alpha, compute_dtype, use_pallas)
+        G = G.at[b.item_ids].add(Gb, mode="drop")
+        g = g.at[b.item_ids].add(gb, mode="drop")
+    return G, g
+
+
+def _half_sweep_ring(
+    key: jax.Array,
+    X_opp_loc: jax.Array,  # [cap_opp, K] this device's opposite-side shard
+    side: RingSide,  # LOCAL slices (leading S axis already split)
+    hyper: HyperParams,
+    cfg: BPMFConfig,
+    num_shards: int,
+) -> jax.Array:
+    """Paper §IV-C: rotate opposite shards around the ring, overlap compute.
+
+    The ppermute for step t+1 is issued *before* step t's Gram accumulation,
+    so the ICI transfer proceeds while the MXU contracts — the paper's
+    Isend/Irecv-with-buffering, with the whole shard as the maximal buffer.
+    """
+    cap = side.cap
+    K = X_opp_loc.shape[-1]
+    G = jnp.zeros((cap, K, K), jnp.float32)
+    g = jnp.zeros((cap, K), jnp.float32)
+
+    perm = [(i, (i + 1) % num_shards) for i in range(num_shards)]
+    buf = X_opp_loc
+    for t in range(num_shards):
+        if t + 1 < num_shards:
+            nxt = jax.lax.ppermute(buf, RING_AXIS, perm)  # in flight during gram
+        G, g = _accumulate_buckets(
+            G, g, buf, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.use_pallas
+        )
+        if t + 1 < num_shards:
+            buf = nxt
+
+    return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
+
+
+def _half_sweep_allgather(
+    key: jax.Array,
+    X_opp_loc: jax.Array,
+    side: RingSide,
+    hyper: HyperParams,
+    cfg: BPMFConfig,
+    num_shards: int,
+) -> jax.Array:
+    """Synchronous baseline: one blocking all-gather, then local updates.
+
+    Reuses the ring neighbor lists — at step t the slice of the gathered
+    matrix standing in for the ring buffer is shard (d - t) mod S.
+    """
+    cap = side.cap
+    K = X_opp_loc.shape[-1]
+    cap_opp = X_opp_loc.shape[0]
+    X_full = jax.lax.all_gather(X_opp_loc, RING_AXIS, tiled=True)  # [S*cap_opp, K]
+    d = jax.lax.axis_index(RING_AXIS)
+
+    G = jnp.zeros((cap, K, K), jnp.float32)
+    g = jnp.zeros((cap, K), jnp.float32)
+    for t in range(num_shards):
+        o = (d - t) % num_shards
+        shard = jax.lax.dynamic_slice(X_full, (o * cap_opp, 0), (cap_opp, K))
+        G, g = _accumulate_buckets(
+            G, g, shard, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.use_pallas
+        )
+    return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
+
+
+def _sample_hyper_dist(
+    key: jax.Array, X_loc: jax.Array, orig_ids: jax.Array, prior
+) -> HyperParams:
+    """NW conditional from psum'd sufficient statistics (identical on all devices)."""
+    weights = (orig_ids >= 0).astype(X_loc.dtype)
+    n, sx, sxx = hyper_sufficient_stats(X_loc, weights)
+    n = jax.lax.psum(n, RING_AXIS)
+    sx = jax.lax.psum(sx, RING_AXIS)
+    sxx = jax.lax.psum(sxx, RING_AXIS)
+    return sample_hyper_from_stats(key, n, sx, sxx, prior)
+
+
+def _predict_dist(
+    U_loc: jax.Array,
+    V_loc: jax.Array,
+    test: DistTestSet,
+    mean_rating: jax.Array,
+    min_rating: float,
+    max_rating: float,
+    num_shards: int,
+) -> jax.Array:
+    """Test predictions with factor rows scattered across the ring.
+
+    Each test row/col lives on exactly one shard; a masked local gather
+    followed by a psum reconstructs the [T, K] rows on every device — two
+    small collectives per sweep, negligible next to the factor rotation.
+    """
+    d = jax.lax.axis_index(RING_AXIS)
+    cap_u, K = U_loc.shape
+    cap_v = V_loc.shape[0]
+
+    def fetch(X_loc: jax.Array, ids: jax.Array, cap: int) -> jax.Array:
+        shard = ids // cap
+        local = ids % cap
+        mine = (shard == d).astype(X_loc.dtype)
+        rows = jnp.take(X_loc, local, axis=0, mode="clip") * mine[:, None]
+        return jax.lax.psum(rows, RING_AXIS)
+
+    u_rows = fetch(U_loc, test.rows, cap_u)
+    v_rows = fetch(V_loc, test.cols, cap_v)
+    preds = jnp.sum(u_rows * v_rows, axis=-1) + mean_rating
+    return jnp.clip(preds, min_rating, max_rating)
+
+
+def _sweep_device_fn(
+    key: jax.Array,
+    U_loc: jax.Array,
+    V_loc: jax.Array,
+    sweep: jax.Array,
+    pred_sum: jax.Array,
+    pred_n: jax.Array,
+    data: DistBPMFData,  # local slices of the sharded leaves
+    cfg: BPMFConfig,
+) -> tuple[jax.Array, jax.Array, HyperParams, HyperParams, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One full Gibbs sweep on one device (Algorithm 1, distributed)."""
+    S = data.num_shards
+    prior = cfg.prior()
+    k_hv, k_v, k_hu, k_u = sweep_keys(key, sweep)
+    half = _half_sweep_ring if cfg.comm_mode == "ring" else _half_sweep_allgather
+
+    # movies given users
+    hyper_V = _sample_hyper_dist(k_hv, V_loc, data.movies.orig_ids, prior)
+    V_new = half(k_v, U_loc, data.movies, hyper_V, cfg, S)
+    # users given updated movies
+    hyper_U = _sample_hyper_dist(k_hu, U_loc, data.users.orig_ids, prior)
+    U_new = half(k_u, V_new, data.users, hyper_U, cfg, S)
+
+    preds = _predict_dist(
+        U_new, V_new, data.test, data.mean_rating, data.min_rating, data.max_rating, S
+    )
+    new_sweep = sweep + 1
+    burned = (new_sweep > cfg.burn_in).astype(jnp.int32)
+    pred_sum = pred_sum + preds * burned
+    pred_n = pred_n + burned
+    r_sample = rmse(preds, data.test.vals)
+    avg = pred_sum / jnp.maximum(pred_n, 1).astype(jnp.float32)
+    r_avg = jnp.where(pred_n > 0, rmse(avg, data.test.vals), r_sample)
+    return U_new, V_new, hyper_U, hyper_V, new_sweep, pred_sum, pred_n, jnp.stack([r_sample, r_avg])
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+
+def make_ring_mesh(devices: Sequence[jax.Device] | None = None) -> Mesh:
+    """1-D ring mesh over all (or the given) devices."""
+    devices = list(devices) if devices is not None else jax.devices()
+    return Mesh(np.asarray(devices), (RING_AXIS,))
+
+
+def init_dist_state(
+    key: jax.Array, data: DistBPMFData, cfg: BPMFConfig, mesh: Mesh
+) -> DistState:
+    """Prior-predictive init, bitwise-identical per original item id to
+    `gibbs.init_state` (both key rows by original id via fold_in)."""
+    from repro.core.gibbs import init_rows
+
+    ku, kv = jax.random.split(key)
+    dt = cfg.sample_dtype
+    sharding = NamedSharding(mesh, P(RING_AXIS))
+    init = jax.jit(functools.partial(init_rows, K=cfg.K, dtype=dt), out_shardings=sharding)
+    U = init(ku, data.users.orig_ids)
+    V = init(kv, data.movies.orig_ids)
+    return DistState(
+        U=U,
+        V=V,
+        hyper_U=HyperParams.init(cfg.K, dt),
+        hyper_V=HyperParams.init(cfg.K, dt),
+        sweep=jnp.zeros((), jnp.int32),
+    )
+
+
+def _bucket_specs(side: RingSide) -> RingSide:
+    """PartitionSpec tree matching RingSide: all flat leading axes ring-sharded."""
+    ring = P(RING_AXIS)
+    steps = tuple(
+        tuple(Bucket(item_ids=ring, nbr=ring, val=ring, nnz=ring) for _ in bs)
+        for bs in side.steps
+    )
+    return RingSide(steps=steps, orig_ids=ring, cap=side.cap, num_items=side.num_items)
+
+
+def data_specs(data: DistBPMFData) -> DistBPMFData:
+    rep = P()
+    return DistBPMFData(
+        users=_bucket_specs(data.users),
+        movies=_bucket_specs(data.movies),
+        test=DistTestSet(rows=rep, cols=rep, vals=rep),
+        mean_rating=rep,
+        num_shards=data.num_shards,
+        min_rating=data.min_rating,
+        max_rating=data.max_rating,
+    )
+
+
+def shard_data(data: DistBPMFData, mesh: Mesh) -> DistBPMFData:
+    """Place the host-built data with its ring sharding."""
+    specs = data_specs(data)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        data,
+        specs,
+        is_leaf=lambda x: isinstance(x, (jax.Array, jnp.ndarray)) or hasattr(x, "shape"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
+def dist_gibbs_sweep(
+    key: jax.Array,
+    state: DistState,
+    pred_state: PredictionState,
+    data: DistBPMFData,
+    cfg: BPMFConfig,
+    mesh: Mesh,
+) -> tuple[DistState, PredictionState, SweepMetrics]:
+    """jit entry point: one distributed sweep over the ring mesh."""
+    ring = P(RING_AXIS)
+    rep = P()
+    hyper_spec = HyperParams(mu=rep, Lam=rep)
+
+    fn = shard_map(
+        functools.partial(_sweep_device_fn, cfg=cfg),
+        mesh=mesh,
+        in_specs=(
+            rep,  # key
+            ring,  # U
+            ring,  # V
+            rep,  # sweep
+            rep,  # pred_sum (replicated test preds)
+            rep,  # pred_n
+            data_specs(data),
+        ),
+        out_specs=(ring, ring, hyper_spec, hyper_spec, rep, rep, rep, rep),
+        check_vma=False,
+    )
+    U, V, hU, hV, sweep, psum_, pn, r = fn(
+        key, state.U, state.V, state.sweep, pred_state.sum_pred, pred_state.num_samples, data
+    )
+    new_state = DistState(U=U, V=V, hyper_U=hU, hyper_V=hV, sweep=sweep)
+    new_pred = PredictionState(sum_pred=psum_, num_samples=pn)
+    return new_state, new_pred, SweepMetrics(r[0], r[1], sweep)
+
+
+def run_distributed(
+    key: jax.Array,
+    data: DistBPMFData,
+    cfg: BPMFConfig,
+    mesh: Mesh | None = None,
+    callback=None,
+) -> tuple[DistState, PredictionState, list[SweepMetrics]]:
+    """Driver: init, shard, sweep ``cfg.num_sweeps`` times."""
+    mesh = mesh or make_ring_mesh()
+    k_init, k_run = jax.random.split(key)
+    data = shard_data(data, mesh)
+    state = init_dist_state(k_init, data, cfg, mesh)
+    pred_state = PredictionState.init(data.test.rows.shape[0])
+    history: list[SweepMetrics] = []
+    for _ in range(cfg.num_sweeps):
+        state, pred_state, metrics = dist_gibbs_sweep(k_run, state, pred_state, data, cfg, mesh)
+        history.append(jax.tree_util.tree_map(float, metrics))
+        if callback is not None:
+            callback(state, metrics)
+    return state, pred_state, history
+
+
+def gather_factors(
+    state: DistState, plan: DistPlan
+) -> tuple[np.ndarray, np.ndarray]:
+    """Undo the relabeling: return (U, V) in original item order (host numpy)."""
+    U = np.asarray(state.U)
+    V = np.asarray(state.V)
+    return U[plan.part_users.perm], V[plan.part_movies.perm]

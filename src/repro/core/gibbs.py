@@ -1,0 +1,119 @@
+"""Single-program BPMF Gibbs sweep (paper Algorithm 1), jit-compiled.
+
+Order per sweep (exactly Algorithm 1):
+  1. sample movie hyper-parameters from V
+  2. resample every movie from (U, R)
+  3. sample user hyper-parameters from U
+  4. resample every user from (new V, R)
+  5. predict test points, update RMSE
+
+The distributed sampler in ``core/distributed.py`` reuses the same
+sub-routines under ``shard_map``; this module is the sequential oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posterior
+from repro.core.hyper import sample_hyper
+from repro.core.prediction import PredictionState, update_predictions
+from repro.core.types import BPMFConfig, BPMFData, BPMFState, HyperParams
+
+
+class SweepMetrics(NamedTuple):
+    rmse_sample: jax.Array
+    rmse_avg: jax.Array
+    sweep: jax.Array
+
+
+def init_rows(key: jax.Array, ids: jax.Array, K: int, dtype=jnp.float32) -> jax.Array:
+    """Per-item prior-predictive rows, keyed by item id.
+
+    fold_in per id makes the init independent of array layout, so the
+    distributed sampler (which stores relabeled, padded shards) starts from
+    bitwise-identical factors — a precondition for the cross-version parity
+    tests.
+    """
+
+    def one(i: jax.Array) -> jax.Array:
+        return 0.1 * jax.random.normal(jax.random.fold_in(key, i), (K,), dtype)
+
+    return jax.vmap(one)(ids)
+
+
+def init_state(key: jax.Array, num_users: int, num_movies: int, cfg: BPMFConfig) -> BPMFState:
+    """Draw U, V from the prior predictive (standard normal scaled)."""
+    ku, kv = jax.random.split(key)
+    dt = cfg.sample_dtype
+    return BPMFState(
+        U=init_rows(ku, jnp.arange(num_users, dtype=jnp.int32), cfg.K, dt),
+        V=init_rows(kv, jnp.arange(num_movies, dtype=jnp.int32), cfg.K, dt),
+        hyper_U=HyperParams.init(cfg.K, dt),
+        hyper_V=HyperParams.init(cfg.K, dt),
+        sweep=jnp.zeros((), jnp.int32),
+    )
+
+
+def sweep_keys(key: jax.Array, sweep: jax.Array) -> tuple[jax.Array, ...]:
+    """Deterministic per-sweep keys: (hyper_V, movies, hyper_U, users).
+
+    Keys depend only on (base key, sweep index) so any layout of the sampler
+    draws identical randomness.
+    """
+    k = jax.random.fold_in(key, sweep)
+    return tuple(jax.random.fold_in(k, i) for i in range(4))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def gibbs_sweep(
+    key: jax.Array,
+    state: BPMFState,
+    pred_state: PredictionState,
+    data: BPMFData,
+    cfg: BPMFConfig,
+) -> tuple[BPMFState, PredictionState, SweepMetrics]:
+    prior = cfg.prior()
+    k_hv, k_v, k_hu, k_u = sweep_keys(key, state.sweep)
+
+    # movies given users
+    hyper_V = sample_hyper(k_hv, state.V, prior)
+    V = posterior.update_side(
+        k_v, state.V, state.U, data.movies, hyper_V, cfg.alpha,
+        cfg.compute_dtype, cfg.use_pallas,
+    )
+    # users given (updated) movies
+    hyper_U = sample_hyper(k_hu, state.U, prior)
+    U = posterior.update_side(
+        k_u, state.U, V, data.users, hyper_U, cfg.alpha,
+        cfg.compute_dtype, cfg.use_pallas,
+    )
+
+    sweep = state.sweep + 1
+    new_state = BPMFState(U=U, V=V, hyper_U=hyper_U, hyper_V=hyper_V, sweep=sweep)
+    pred_state, r_sample, r_avg = update_predictions(
+        pred_state, U, V, data, burned_in=sweep > cfg.burn_in
+    )
+    return new_state, pred_state, SweepMetrics(r_sample, r_avg, sweep)
+
+
+def run(
+    key: jax.Array,
+    data: BPMFData,
+    cfg: BPMFConfig,
+    callback=None,
+) -> tuple[BPMFState, PredictionState, list[SweepMetrics]]:
+    """Run ``cfg.num_sweeps`` sweeps; returns final state and metric history."""
+    k_init, k_run = jax.random.split(key)
+    state = init_state(k_init, data.num_users, data.num_movies, cfg)
+    pred_state = PredictionState.init(data.test.rows.shape[0])
+    history: list[SweepMetrics] = []
+    for _ in range(cfg.num_sweeps):
+        state, pred_state, metrics = gibbs_sweep(k_run, state, pred_state, data, cfg)
+        history.append(jax.tree_util.tree_map(lambda x: float(x), metrics))
+        if callback is not None:
+            callback(state, metrics)
+    return state, pred_state, history

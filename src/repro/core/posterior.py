@@ -1,0 +1,149 @@
+"""Per-item conditional posterior updates, bucketed for dense TPU compute.
+
+For one item i of side X (say a movie) with neighbor latents {u_j} and
+centered ratings {r_ij}:
+
+    precision  P_i = Lambda + alpha * sum_j u_j u_j^T          [K, K]
+    linear     l_i = Lambda mu + alpha * sum_j u_j r_ij        [K]
+    sample     x_i = P_i^{-1} l_i + chol(P_i)^{-T} z,  z ~ N(0, I_K)
+
+The paper's multi-core contribution is making the "for all items" loop fast
+under skewed nnz; here each nnz-bucket is one dense [B, P, K] gather plus a
+Gram contraction (Pallas kernel on TPU), and the Cholesky solve is batched.
+
+Noise is generated per *global item id* with ``jax.random.fold_in`` so every
+layout (single device, ring-distributed, re-balanced) produces the same
+sample for the same item — the cross-version RMSE-parity claim of the paper
+(§V-B) becomes an exact test instead of a statistical one.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from repro.core.types import Bucket, BucketedSide, HyperParams
+
+
+def item_noise(key: jax.Array, item_ids: jax.Array, K: int, dtype=jnp.float32) -> jax.Array:
+    """Per-item N(0, I_K) noise, independent of batch layout."""
+
+    def one(i: jax.Array) -> jax.Array:
+        return jax.random.normal(jax.random.fold_in(key, i), (K,), dtype)
+
+    return jax.vmap(one)(item_ids)
+
+
+def gram_terms(
+    X_opp: jax.Array,
+    bucket: Bucket,
+    alpha: float,
+    compute_dtype=jnp.float32,
+    use_pallas: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(G, g) with G = alpha * sum_j x_j x_j^T  [B,K,K], g = alpha * sum_j x_j r_j [B,K].
+
+    ``use_pallas`` routes the gather+Gram through the TPU kernel; the jnp path
+    is the reference implementation (and what the CPU dry-run compiles).
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        G, g = kops.bpmf_gram(X_opp, bucket.nbr, bucket.val, bucket.nnz, compute_dtype=compute_dtype)
+    else:
+        mask = bucket.mask()
+        Xn = jnp.take(X_opp, bucket.nbr, axis=0)  # [B, P, K]
+        Xn = (Xn * mask[..., None]).astype(compute_dtype)
+        G = jnp.einsum("bpk,bpl->bkl", Xn, Xn, preferred_element_type=jnp.float32)
+        g = jnp.einsum("bpk,bp->bk", Xn, bucket.val.astype(compute_dtype), preferred_element_type=jnp.float32)
+    a = jnp.asarray(alpha, jnp.float32)
+    return a * G.astype(jnp.float32), a * g.astype(jnp.float32)
+
+
+def sample_from_terms(
+    key: jax.Array,
+    item_ids: jax.Array,
+    G: jax.Array,
+    g: jax.Array,
+    hyper: HyperParams,
+) -> jax.Array:
+    """Draw x_i ~ N(P^-1 l, P^-1) for a batch of items from accumulated terms."""
+    K = g.shape[-1]
+    prec = G + hyper.Lam  # [B, K, K]
+    lin = g + hyper.Lam @ hyper.mu  # [B, K] (broadcast add of [K])
+    L = jnp.linalg.cholesky(prec)
+    # mean = P^-1 lin via two triangular solves
+    y = solve_triangular(L, lin[..., None], lower=True)
+    mean = solve_triangular(jnp.swapaxes(L, -1, -2), y, lower=False)[..., 0]
+    z = item_noise(key, item_ids, K, dtype=g.dtype)
+    noise = solve_triangular(jnp.swapaxes(L, -1, -2), z[..., None], lower=False)[..., 0]
+    return mean + noise
+
+
+def update_bucket(
+    key: jax.Array,
+    X_side: jax.Array,
+    X_opp: jax.Array,
+    bucket: Bucket,
+    hyper: HyperParams,
+    alpha: float,
+    compute_dtype=jnp.float32,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Sample all items of one bucket and scatter them into X_side.
+
+    Bucket rows with ``item_ids == -1`` are padding and dropped by the
+    scatter (mode="drop").
+    """
+    G, g = gram_terms(X_opp, bucket, alpha, compute_dtype, use_pallas)
+    new = sample_from_terms(key, bucket.item_ids, G, g, hyper)
+    return X_side.at[bucket.item_ids].set(new.astype(X_side.dtype), mode="drop")
+
+
+def update_side(
+    key: jax.Array,
+    X_side: jax.Array,
+    X_opp: jax.Array,
+    side: BucketedSide,
+    hyper: HyperParams,
+    alpha: float,
+    compute_dtype=jnp.float32,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """One half-sweep: resample every item of X_side given X_opp.
+
+    Items are conditionally independent given (X_opp, hyper), so bucket order
+    does not matter statistically; we loop buckets smallest-P first (the
+    paper's cheap-items-first scheduling).
+    """
+    for bucket in side.buckets:
+        X_side = update_bucket(
+            key, X_side, X_opp, bucket, hyper, alpha, compute_dtype, use_pallas
+        )
+    return X_side
+
+
+# --- reference (naive, un-bucketed) implementation for testing -----------------
+
+
+def update_item_naive(
+    key: jax.Array,
+    item_id: int,
+    nbr: jax.Array,
+    val: jax.Array,
+    X_opp: jax.Array,
+    hyper: HyperParams,
+    alpha: float,
+) -> jax.Array:
+    """Textbook single-item update (no padding, no bucketing) — test oracle."""
+    Xn = X_opp[nbr]  # [n, K]
+    K = Xn.shape[-1]
+    prec = hyper.Lam + alpha * Xn.T @ Xn
+    lin = hyper.Lam @ hyper.mu + alpha * Xn.T @ val
+    L = jnp.linalg.cholesky(prec)
+    y = solve_triangular(L, lin, lower=True)
+    mean = solve_triangular(L.T, y, lower=False)
+    z = jax.random.normal(jax.random.fold_in(key, item_id), (K,), dtype=mean.dtype)
+    return mean + solve_triangular(L.T, z, lower=False)

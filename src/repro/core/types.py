@@ -1,0 +1,155 @@
+"""Core pytree containers for BPMF state, priors and bucketed rating data.
+
+The rating matrix ``R`` (M users x N movies, sparse) is factorized as
+``R ~ U @ V.T`` with ``U: [M, K]`` and ``V: [N, K]``. Conditional
+independence of items given the opposite factor matrix is the source of all
+parallelism in the paper; the containers here encode the bucketed layout that
+makes that parallelism dense enough for the MXU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class NormalWishartPrior:
+    """Fixed hyperprior p(mu, Lambda) = N(mu|mu0, (b0 Lam)^-1) W(Lam|W0, nu0)."""
+
+    mu0: jax.Array  # [K]
+    beta0: jax.Array  # scalar
+    W0: jax.Array  # [K, K]
+    nu0: jax.Array  # scalar
+
+    @staticmethod
+    def default(K: int, dtype: Any = jnp.float32) -> "NormalWishartPrior":
+        return NormalWishartPrior(
+            mu0=jnp.zeros((K,), dtype),
+            beta0=jnp.asarray(2.0, dtype),
+            W0=jnp.eye(K, dtype=dtype),
+            nu0=jnp.asarray(float(K), dtype),
+        )
+
+
+@pytree_dataclass
+class HyperParams:
+    """Sampled (mu, Lambda) for one side (users or movies)."""
+
+    mu: jax.Array  # [K]
+    Lam: jax.Array  # [K, K] precision
+
+    @staticmethod
+    def init(K: int, dtype: Any = jnp.float32) -> "HyperParams":
+        return HyperParams(mu=jnp.zeros((K,), dtype), Lam=jnp.eye(K, dtype=dtype))
+
+
+@pytree_dataclass
+class BPMFState:
+    """Full Gibbs state."""
+
+    U: jax.Array  # [M, K] user latents
+    V: jax.Array  # [N, K] movie latents
+    hyper_U: HyperParams
+    hyper_V: HyperParams
+    sweep: jax.Array  # scalar int32, number of completed sweeps
+
+    @property
+    def K(self) -> int:
+        return self.U.shape[-1]
+
+
+@pytree_dataclass
+class Bucket:
+    """A dense, padded group of items with similar rating counts.
+
+    All arrays are device arrays; ``item_ids`` indexes the side being updated,
+    ``nbr`` indexes the opposite side. Padded neighbor slots have index 0 and
+    ``nnz`` masks them out.
+    """
+
+    item_ids: jax.Array  # [B] int32
+    nbr: jax.Array  # [B, P] int32, padded neighbor (opposite-side) indices
+    val: jax.Array  # [B, P] f32, centered ratings, 0 in padding
+    nnz: jax.Array  # [B] int32, true rating count per item
+
+    @property
+    def B(self) -> int:
+        return self.item_ids.shape[0]
+
+    @property
+    def P(self) -> int:
+        return self.nbr.shape[1]
+
+    def mask(self) -> jax.Array:
+        return (jnp.arange(self.P, dtype=jnp.int32)[None, :] < self.nnz[:, None]).astype(self.val.dtype)
+
+
+@pytree_dataclass
+class BucketedSide:
+    """All buckets for one side (the per-user or per-movie CSR, padded).
+
+    ``buckets`` is a tuple so the container stays a valid pytree with static
+    structure; bucket shapes differ, which is fine — the per-bucket update is
+    traced once per shape.
+    """
+
+    buckets: tuple[Bucket, ...]
+    num_items: int = static_field(default=0)
+
+    def total_ratings(self) -> int:
+        return int(sum(np.sum(np.asarray(b.nnz)) for b in self.buckets))
+
+
+@pytree_dataclass
+class TestSet:
+    """Held-out ratings for RMSE tracking."""
+
+    rows: jax.Array  # [T] int32 user ids
+    cols: jax.Array  # [T] int32 movie ids
+    vals: jax.Array  # [T] f32 raw (uncentered) ratings
+
+
+@pytree_dataclass
+class BPMFData:
+    """Everything the Gibbs sweep needs besides the state.
+
+    users / movies are each the bucketed neighbor lists for updating that
+    side. ``mean_rating`` recenters ratings; predictions add it back.
+    """
+
+    users: BucketedSide  # update U: neighbors are movies
+    movies: BucketedSide  # update V: neighbors are users
+    test: TestSet
+    mean_rating: jax.Array  # scalar f32
+    num_users: int = static_field(default=0)
+    num_movies: int = static_field(default=0)
+    min_rating: float = static_field(default=-np.inf)
+    max_rating: float = static_field(default=np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class BPMFConfig:
+    """Static configuration of the sampler (python-side, hashable)."""
+
+    K: int = 32
+    alpha: float = 2.0  # rating noise precision
+    num_sweeps: int = 50
+    burn_in: int = 8
+    beta0: float = 2.0
+    # bucketing: pad sizes tried in order; items with nnz > last go to chunked path
+    bucket_pads: Sequence[int] = (8, 32, 128, 512, 2048)
+    # distributed
+    comm_mode: str = "ring"  # "ring" (paper async) | "allgather" (sync baseline)
+    sample_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32  # contraction dtype (bf16 on TPU)
+    use_pallas: bool = False  # route gram through the Pallas kernel (TPU / interpret)
+
+    def prior(self) -> NormalWishartPrior:
+        p = NormalWishartPrior.default(self.K, self.sample_dtype)
+        return dataclasses.replace(p, beta0=jnp.asarray(self.beta0, self.sample_dtype))  # type: ignore[arg-type]

@@ -1,0 +1,10 @@
+from repro.data.sparse import RatingsCOO, bucketize_side, build_bpmf_data, csr_from_coo
+from repro.data.synthetic import synthetic_ratings
+
+__all__ = [
+    "RatingsCOO",
+    "bucketize_side",
+    "build_bpmf_data",
+    "csr_from_coo",
+    "synthetic_ratings",
+]

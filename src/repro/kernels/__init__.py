@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+bpmf_gram: the gather + Gram accumulation inside the per-item conditional
+update (the dominant FLOPs of BPMF, paper SII). ops.py dispatches between
+the Pallas kernel and the jnp reference path.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel for the BPMF gather + Gram accumulation hot loop.
+
+For a bucket of items, each with up to P neighbors indexed into the
+opposite-side latent shard ``X [Ns, K]``, compute per item
+
+    G[b] = sum_p m[b,p] * x_{nbr[b,p]} x_{nbr[b,p]}^T        [K, K]
+    g[b] = sum_p m[b,p] * val[b,p] * x_{nbr[b,p]}            [K]
+
+TPU adaptation (DESIGN.md §2): a ragged HBM gather is the natural GPU
+formulation; on TPU we exploit that the *ring-distributed* layout keeps the
+per-step shard small enough for VMEM, so the gather becomes a one-hot MXU
+contraction:
+
+    W[b]  = onehot(nbr[b]) * mask[b]        [P, Ns]   (built in VREGs)
+    Xg[b] = W[b] @ X                        [P, K]    (MXU)
+    G[b]  = Xg[b]^T @ Xg[b]                 [K, K]    (MXU)
+    g[b]  = Xg[b]^T @ (val[b] * mask[b])    [K]       (MXU)
+
+Everything stays in VMEM; the P axis is chunked so the one-hot tile
+[TB, PC, Ns] fits. FLOPs per item: P*Ns*K (gather) + P*K^2 (Gram) — the
+one-hot gather is profitable only when Ns is small (the sharded case, which
+is exactly the paper's distributed hot loop). ``ops.bpmf_gram`` falls back to
+the XLA gather path for large Ns.
+
+Grid: one program per TB-item tile. Tiling knobs (TB, PC) are exposed for
+the autotune sweep in benchmarks/fig2_item_update.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(
+    nbr_ref,  # [TB, P] int32 (VMEM)
+    val_ref,  # [TB, P] f32 (VMEM)
+    nnz_ref,  # [TB, 1] int32 (VMEM)
+    x_ref,  # [Ns, K] compute dtype (VMEM)
+    G_ref,  # [TB, K, K] f32 out
+    g_ref,  # [TB, K] f32 out
+    *,
+    pc: int,
+    compute_dtype,
+):
+    TB, P = nbr_ref.shape
+    Ns, K = x_ref.shape
+    x = x_ref[...].astype(compute_dtype)
+    nnz = nnz_ref[...]  # [TB, 1]
+
+    num_chunks = P // pc
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (TB, pc, Ns), 2)
+
+    def body(c, acc):
+        G_acc, g_acc = acc
+        start = c * pc
+        nbr = jax.lax.dynamic_slice(nbr_ref[...], (0, start), (TB, pc))  # [TB, pc]
+        val = jax.lax.dynamic_slice(val_ref[...], (0, start), (TB, pc))
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (TB, pc), 1)
+        mask = (pos < nnz).astype(compute_dtype)  # [TB, pc]
+        onehot = (nbr[:, :, None] == row_ids).astype(compute_dtype) * mask[:, :, None]
+        # gather via MXU: [TB, pc, Ns] @ [Ns, K] -> [TB, pc, K]
+        xg = jax.lax.dot_general(
+            onehot, x, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ).astype(compute_dtype)
+        G_acc = G_acc + jax.lax.dot_general(
+            xg, xg, (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+        )
+        g_acc = g_acc + jax.lax.dot_general(
+            xg, (val.astype(compute_dtype) * mask)[:, :, None],
+            (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )[:, :, 0]
+        return G_acc, g_acc
+
+    G0 = jnp.zeros((TB, K, K), jnp.float32)
+    g0 = jnp.zeros((TB, K), jnp.float32)
+    G, g = jax.lax.fori_loop(0, num_chunks, body, (G0, g0), unroll=(num_chunks <= 4))
+    G_ref[...] = G
+    g_ref[...] = g
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tb", "pc", "compute_dtype", "interpret"),
+)
+def bpmf_gram_pallas(
+    X: jax.Array,  # [Ns, K]
+    nbr: jax.Array,  # [B, P] int32, B % tb == 0, P % pc == 0
+    val: jax.Array,  # [B, P]
+    nnz: jax.Array,  # [B] int32
+    *,
+    tb: int = 8,
+    pc: int = 128,
+    compute_dtype=jnp.float32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, P = nbr.shape
+    Ns, K = X.shape
+    if B % tb:
+        raise ValueError(f"B={B} not a multiple of tb={tb} (ops.py pads)")
+    if P % pc:
+        raise ValueError(f"P={P} not a multiple of pc={pc} (ops.py pads)")
+    grid = (B // tb,)
+    kernel = functools.partial(_gram_kernel, pc=pc, compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, P), lambda i: (i, 0)),
+            pl.BlockSpec((tb, P), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((Ns, K), lambda i: (0, 0)),  # whole shard resident in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, K, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, K), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nbr, val, nnz[:, None], X)
+
+
+def vmem_bytes_estimate(tb: int, pc: int, Ns: int, K: int, P: int, compute_dtype=jnp.float32) -> int:
+    """Rough VMEM working-set estimate used by ops.py to pick (tb, pc)."""
+    itemsize = jnp.dtype(compute_dtype).itemsize
+    onehot = tb * pc * Ns * itemsize
+    x = Ns * K * itemsize
+    xg = tb * pc * K * 4
+    blocks = tb * P * (4 + 4)  # nbr + val
+    acc = tb * K * K * 4 + tb * K * 4
+    return onehot + x + xg + blocks + acc

@@ -1,0 +1,68 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+Each op picks the best implementation for the current backend:
+  - TPU: the Pallas kernel (one-hot MXU gather) when the shard fits VMEM,
+  - CPU (this container): interpret-mode Pallas for tests, jnp path otherwise.
+The jnp path in ``ref.py`` is the semantic ground truth everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bpmf_gram import bpmf_gram_pallas, vmem_bytes_estimate
+from repro.utils import round_up
+
+_VMEM_BUDGET = 12 * 2**20  # leave headroom below the ~16 MB/core VMEM
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
+    size = x.shape[axis]
+    target = round_up(max(size, 1), multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def pick_tiling(B: int, P: int, Ns: int, K: int, compute_dtype=jnp.float32) -> tuple[int, int] | None:
+    """Choose (tb, pc) fitting the VMEM budget, or None if the shard is too big."""
+    for tb in (8, 4, 2, 1):
+        for pc in (512, 256, 128):
+            if vmem_bytes_estimate(tb, pc, Ns, K, min(P, 4096), compute_dtype) <= _VMEM_BUDGET:
+                return tb, pc
+    return None
+
+
+def bpmf_gram(
+    X: jax.Array,
+    nbr: jax.Array,
+    val: jax.Array,
+    nnz: jax.Array,
+    *,
+    compute_dtype=jnp.float32,
+    force_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Dispatch the gather+Gram op; returns (G [B,K,K] f32, g [B,K] f32)."""
+    B, P = nbr.shape
+    Ns, K = X.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tiling = pick_tiling(B, P, Ns, K, compute_dtype)
+    use_pallas = force_pallas if force_pallas is not None else (tiling is not None)
+    if not use_pallas or tiling is None:
+        return ref.bpmf_gram_ref(X, nbr, val, nnz, compute_dtype)
+
+    tb, pc = tiling
+    nbr_p = _pad_axis(_pad_axis(nbr, 1, pc), 0, tb)
+    val_p = _pad_axis(_pad_axis(val, 1, pc), 0, tb)
+    nnz_p = _pad_axis(nnz, 0, tb)
+    G, g = bpmf_gram_pallas(
+        X, nbr_p, val_p, nnz_p, tb=tb, pc=pc, compute_dtype=compute_dtype, interpret=interpret
+    )
+    return G[:B], g[:B]

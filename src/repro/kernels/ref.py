@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bpmf_gram_ref(
+    X: jnp.ndarray,  # [Ns, K] opposite-side latents
+    nbr: jnp.ndarray,  # [B, P] int32 padded neighbor indices into X
+    val: jnp.ndarray,  # [B, P] f32 centered ratings (0 in padding)
+    nnz: jnp.ndarray,  # [B] int32 true neighbor counts
+    compute_dtype=jnp.float32,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """G[b] = sum_p x_{nbr[b,p]} x^T (masked), g[b] = sum_p x_{nbr[b,p]} val[b,p].
+
+    Accumulation in f32 regardless of compute dtype (MXU semantics).
+    """
+    P = nbr.shape[1]
+    mask = (jnp.arange(P, dtype=jnp.int32)[None, :] < nnz[:, None]).astype(compute_dtype)
+    Xn = jnp.take(X, nbr, axis=0).astype(compute_dtype) * mask[..., None]
+    G = jnp.einsum("bpk,bpl->bkl", Xn, Xn, preferred_element_type=jnp.float32)
+    g = jnp.einsum("bpk,bp->bk", Xn, val.astype(compute_dtype), preferred_element_type=jnp.float32)
+    return G.astype(jnp.float32), g.astype(jnp.float32)

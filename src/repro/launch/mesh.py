@@ -1,0 +1,45 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before its first jax call and only then
+builds meshes.
+
+Axes:
+  * ``pod``   — across-pod axis (2 pods in the multi-pod dry-run). Only
+    data parallelism crosses pods: inter-pod DCI links are an order of
+    magnitude slower than intra-pod ICI, so the gradient all-reduce is the
+    only collective allowed to traverse them.
+  * ``data``  — within-pod data parallelism (batch) + FSDP-style weight
+    sharding of the "embed" dimension.
+  * ``model`` — tensor parallelism (mlp/heads/vocab) + sequence-sharded KV
+    caches at decode.
+
+The BPMF core uses its own 1-D "ring" mesh (core/distributed.py); for
+multi-pod BPMF the (pod, data, model) mesh is flattened into that ring —
+see launch/dryrun.py::bpmf_ring_from.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / CPU smoke runs)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def bpmf_ring_from(mesh: Mesh) -> Mesh:
+    """Flatten a production mesh into the 1-D BPMF ring (paper §IV maps MPI
+    ranks onto one logical ring; ICI neighbors stay adjacent)."""
+    devices = np.asarray(mesh.devices).reshape(-1)
+    return Mesh(devices, ("ring",))

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+
+    python -m repro.launch.serve --arch gemma-2b --reduced --batch 4 \
+        --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.models.module import DECODE_RULES, SERVE_RULES
+from repro.training.serve import make_decode_step, make_prefill_step
+from repro.utils import logger
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.is_encoder:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+    model = build_model(cfg)
+    mesh = make_host_mesh(model=args.model_parallel)
+    key = jax.random.key(args.seed)
+    params = model.init(key)
+
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_len)
+    prefill = jax.jit(make_prefill_step(model, SERVE_RULES, mesh), donate_argnums=(2,))
+    decode = jax.jit(make_decode_step(model, DECODE_RULES, mesh, args.temperature),
+                     donate_argnums=(2,))
+
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    t0 = time.time()
+    logits, cache = prefill(params, prompt, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+
+    out = [tok]
+    t0 = time.time()
+    for t in range(args.gen - 1):
+        tok, cache = decode(params, tok, cache,
+                            jnp.asarray(args.prompt_len + t, jnp.int32),
+                            jax.random.fold_in(key, t))
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    logger.info("prefill: %d tokens in %.3fs (%.0f tok/s)",
+                args.batch * args.prompt_len, t_prefill,
+                args.batch * args.prompt_len / max(t_prefill, 1e-9))
+    logger.info("decode: %d steps in %.3fs (%.1f tok/s/seq, %.1f total tok/s)",
+                args.gen - 1, t_decode, (args.gen - 1) / max(t_decode, 1e-9),
+                args.batch * (args.gen - 1) / max(t_decode, 1e-9))
+    logger.info("sample generations (token ids): %s", gen[:2, :12].tolist())
+    assert gen.shape == (args.batch, args.gen)
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.padded_vocab)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

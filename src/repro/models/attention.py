@@ -1,0 +1,591 @@
+"""Attention variants: GQA / MQA (kv=1) / MLA (latent-compressed) / SWA.
+
+One module covers the assigned archs:
+
+  * GQA with arbitrary q-per-kv grouping (yi, nemotron, chameleon, grok,
+    mixtral, zamba2-shared-block, hubert with kv == heads)
+  * MQA as GQA with num_kv_heads == 1 (gemma)
+  * qk-norm (chameleon's query/key layernorm)
+  * sliding-window attention with a rolling KV cache (mixtral) — the cache
+    allocation is ``window`` slots regardless of logical position, which is
+    what makes the 500k-token decode shape deployable
+  * MLA (minicpm3): queries/keys/values reconstructed from a low-rank latent;
+    the cache stores only [ckv (kv_lora) | k_pe (rope_dim)] per token.
+
+Caches are pytrees; decode steps are pure functions (cache in, cache out).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.module import NO_SHARDING, ShardingCtx, desc, fan_in_desc
+from repro.utils import pytree_dataclass, static_field
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class KVCache:
+    """Dense or rolling KV cache.
+
+    ``k``/``v``: [B, W, KV, hd]. For full attention W = max_len and slot i
+    holds position i. For sliding-window attention W = window and slot i
+    holds the latest position p < next_pos with p % W == i.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    next_pos: jax.Array  # [] int32 — tokens cached so far (same for the batch)
+    rolling: bool = static_field(default=False)
+
+    @property
+    def window(self) -> int:
+        return self.k.shape[1]
+
+
+@pytree_dataclass
+class MLACache:
+    """Latent cache: per token only kv_lora + rope_dim floats."""
+
+    ckv: jax.Array  # [B, S, kv_lora]
+    kpe: jax.Array  # [B, S, rope_dim]
+    next_pos: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> KVCache:
+    dt = dtype or cfg.dtype("act")
+    window = cfg.sliding_window if cfg.sliding_window is not None else max_len
+    W = min(window, max_len)
+    shape = (batch, W, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        next_pos=jnp.zeros((), jnp.int32),
+        rolling=cfg.sliding_window is not None,
+    )
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> MLACache:
+    dt = dtype or cfg.dtype("act")
+    return MLACache(
+        ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        kpe=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dt),
+        next_pos=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Descriptors
+# ---------------------------------------------------------------------------
+
+
+def desc_attention(cfg: ModelConfig) -> dict:
+    pd = cfg.dtype("param")
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.attention == "mla":
+        r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        out = {
+            "w_dkv": fan_in_desc((D, r_kv), ("embed", "latent"), D, pd),
+            "w_kpe": fan_in_desc((D, dr), ("embed", "head_dim"), D, pd),
+            "kv_norm": desc((r_kv,), ("latent",), init="ones", dtype=pd),
+            "w_uk": fan_in_desc((r_kv, H, dn), ("latent", "q_heads", "head_dim"), r_kv, pd),
+            "w_uv": fan_in_desc((r_kv, H, dv), ("latent", "q_heads", "head_dim"), r_kv, pd),
+            "w_o": fan_in_desc((H, dv, D), ("q_heads", "head_dim", "embed"), H * dv, pd),
+        }
+        if r_q > 0:
+            out["w_dq"] = fan_in_desc((D, r_q), ("embed", "latent"), D, pd)
+            out["q_norm"] = desc((r_q,), ("latent",), init="ones", dtype=pd)
+            out["w_uq"] = fan_in_desc((r_q, H, dn + dr), ("latent", "q_heads", "head_dim"), r_q, pd)
+        else:
+            out["w_q"] = fan_in_desc((D, H, dn + dr), ("embed", "q_heads", "head_dim"), D, pd)
+        return out
+
+    out = {
+        "w_q": fan_in_desc((D, H, hd), ("embed", "q_heads", "head_dim"), D, pd),
+        "w_k": fan_in_desc((D, KV, hd), ("embed", "kv_heads", "head_dim"), D, pd),
+        "w_v": fan_in_desc((D, KV, hd), ("embed", "kv_heads", "head_dim"), D, pd),
+        "w_o": fan_in_desc((H, hd, D), ("q_heads", "head_dim", "embed"), H * hd, pd),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = desc((hd,), ("head_dim",), init="ones", dtype=pd)
+        out["k_norm"] = desc((hd,), ("head_dim",), init="ones", dtype=pd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+
+def attention_mask(
+    q_pos: jax.Array,  # [Lq] int32 absolute positions of queries
+    kv_pos: jax.Array,  # [S] int32 absolute positions of keys (-1 = invalid slot)
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """Bool [Lq, S]; True = attend."""
+    valid = kv_pos[None, :] >= 0
+    m = valid
+    if causal:
+        m = m & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        m = m & (kv_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def rolling_slot_positions(next_pos: jax.Array, window: int) -> jax.Array:
+    """Absolute position held by each rolling-cache slot (-1 if empty).
+
+    Slot i holds the largest p < next_pos with p % W == i.
+    """
+    i = jnp.arange(window, dtype=jnp.int32)
+    np_ = next_pos.astype(jnp.int32)
+    cycles = (np_ - 1 - i) // window  # floor; negative when slot unwritten
+    pos = i + cycles * window
+    return jnp.where((np_ > 0) & (pos >= 0), pos, -1)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _attend_dense(
+    q: jax.Array,  # [B, Lq, H, dh]
+    k: jax.Array,  # [B, S, KV, dh]
+    v: jax.Array,  # [B, S, KV, dv]
+    mask: jax.Array,  # [Lq, S] bool
+    scale: float,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    """Grouped dot-product attention, fp32 softmax. Returns [B, Lq, H, dv].
+
+    KV heads are EXPANDED to H before the einsums: a [B, Lq, KV, G, dh]
+    factorization of tensor-sharded q heads is inexpressible for GSPMD
+    (H=16-way sharding does not decompose over (KV, G) dims), which makes it
+    re-shard via [B, L, ...]-sized all-reduces every layer. The repeat of the
+    small replicated k/v is shard-local and costs no flops.
+
+    Materializes the [Lq, S] logits — the oracle / short-sequence path."""
+    B, Lq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("blhd,bshd->bhls", q, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhls,bshd->blhd", probs, v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _attend_flash(
+    q: jax.Array,  # [B, Lq, H, dh]
+    k: jax.Array,  # [B, S, KV, dh]
+    v: jax.Array,  # [B, S, KV, dv]
+    q_pos: jax.Array,  # [Lq] int32
+    kv_pos: jax.Array,  # [S] int32 (-1 = invalid)
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+    q_chunk: int,
+    kv_chunk: int,
+    q_parallel: bool = False,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    """Flash-style two-level scan: running (max, denom, acc) over KV blocks,
+    outer scan over Q blocks. Never materializes more than one
+    [B, KV, G, Qc, Kc] logits block — this is what makes the 32k-prefill and
+    500k-decode shapes lowerable. The Pallas kernel (kernels/flash_attn.py)
+    implements the same schedule for TPU; this is its jnp reference.
+    """
+    B, Lq, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    ad = q.dtype
+
+    Qc = min(q_chunk, Lq)
+    Kc = min(kv_chunk, S)
+    Lq_p = -(-Lq // Qc) * Qc
+    S_p = -(-S // Kc) * Kc
+    q = _pad_axis(q, 1, Lq_p)
+    q_pos_p = _pad_axis(q_pos, 0, Lq_p)
+    k = _pad_axis(k, 1, S_p)
+    v = _pad_axis(v, 1, S_p)
+    kv_pos_p = jnp.where(
+        jnp.arange(S_p) < S, _pad_axis(kv_pos, 0, S_p), jnp.asarray(-1, jnp.int32)
+    )
+    nq, nk = Lq_p // Qc, S_p // Kc
+
+    G = H // KV
+    qb = jnp.moveaxis(q.reshape(B, nq, Qc, H, dh), 1, 0)  # [nq, B, Qc, H, dh]
+    kb = jnp.moveaxis(k.reshape(B, nk, Kc, KV, dh), 1, 0)  # [nk, B, Kc, KV, dh]
+    vb = jnp.moveaxis(v.reshape(B, nk, Kc, KV, dv), 1, 0)
+    qpb = q_pos_p.reshape(nq, Qc)
+    kpb = kv_pos_p.reshape(nk, Kc)
+
+    @jax.checkpoint
+    def q_body(_, qblk):
+        # checkpointed: without it the backward saves every [B, H, Qc, Kc]
+        # probability block of BOTH scans — the full attention matrix flash
+        # exists to avoid. Backward recomputes the kv scan per q block.
+        qi, qp = qblk  # [B, Qc, H, dh], [Qc]
+        m0 = jnp.full((B, H, Qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, Qc), jnp.float32)
+        o0 = jnp.zeros((B, Qc, H, dv), jnp.float32)
+
+        def kv_body(carry, kvblk):
+            m, l, o = carry
+            kj, vj, kp = kvblk
+            if G > 1:  # expand KV->H per block (see _attend_dense note)
+                kj = jnp.repeat(kj, G, axis=2)
+                vj = jnp.repeat(vj, G, axis=2)
+            s = (
+                jnp.einsum("bqhd,bshd->bhqs", qi, kj, preferred_element_type=jnp.float32)
+                * scale
+            )
+            mask = attention_mask(qp, kp, causal, window)  # [Qc, Kc]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None]
+            alpha = jnp.exp(m - m_new)  # [B, H, Qc]
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhqs,bshd->bqhd", p.astype(ad), vj, preferred_element_type=jnp.float32
+            )
+            o = o * alpha.transpose(0, 2, 1)[..., None] + pv
+            return (m_new, l, o), None
+
+        (m, l, o), _ = jax.lax.scan(kv_body, (m0, l0, o0), (kb, vb, kpb))
+        denom = l.transpose(0, 2, 1)[..., None]  # [B, Qc, H, 1]
+        out = jnp.where(denom > 0, o / jnp.maximum(denom, 1e-37), 0.0)
+        return 0, out.astype(ad)
+
+    if q_parallel and nq > 1:
+        # SEQUENCE-PARALLEL prefill: q blocks are independent, so instead of
+        # scanning them (which forces the sharded seq dim through
+        # dynamic-slices and makes GSPMD replicate the whole attention), run
+        # them vmapped with the block axis sharded over "model" — per-device
+        # attention work drops by the model-axis width. Batch stays on
+        # (pod, data); together the grid covers the full mesh.
+        qb_c = ctx.constrain(qb, ("qblocks", "batch", None, "q_heads", "head_dim"))
+        outs = jax.vmap(lambda qi, qp: q_body(0, (qi, qp))[1])(qb_c, qpb)
+        outs = ctx.constrain(outs, ("qblocks", "batch", None, "q_heads", "head_dim"))
+    else:
+        _, outs = jax.lax.scan(q_body, 0, (qb, qpb))  # [nq, B, Qc, H, dv]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Lq_p, H, dv)
+    return out[:, :Lq]
+
+
+def _attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    cfg: ModelConfig,
+    scale: float,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    """Dispatch: dense for short (Lq, S); flash-chunked beyond the thresholds."""
+    Lq, S = q.shape[1], k.shape[1]
+    if Lq <= cfg.attn_q_chunk and S <= cfg.attn_kv_chunk:
+        mask = attention_mask(q_pos, kv_pos, cfg.causal, cfg.sliding_window)
+        return _attend_dense(q, k, v, mask, scale, ctx)
+    return _attend_flash(
+        q, k, v, q_pos, kv_pos, cfg.causal, cfg.sliding_window, scale,
+        cfg.attn_q_chunk, cfg.attn_kv_chunk, cfg.flash_q_parallel, ctx,
+    )
+
+
+def apply_attention(
+    params: dict,
+    x: jax.Array,  # [B, L, D]
+    positions: jax.Array,  # [L] int32 absolute positions
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+    cache: Optional[KVCache] = None,
+) -> tuple[jax.Array, Optional[KVCache]]:
+    """GQA/MQA/SWA attention. With ``cache``, appends L tokens then attends
+    over the cache (L=1 is the decode step); without, self-attends over x."""
+    ad = cfg.dtype("act")
+    B, L, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = x.astype(ad)
+
+    qkv_axes = ("embed", "kv_heads", "head_dim")
+    q = jnp.einsum("bld,dhk->blhk", x, ctx.weight(params["w_q"].astype(ad), ("embed", "q_heads", "head_dim")))
+    k = jnp.einsum("bld,dhk->blhk", x, ctx.weight(params["w_k"].astype(ad), qkv_axes))
+    v = jnp.einsum("bld,dhk->blhk", x, ctx.weight(params["w_v"].astype(ad), qkv_axes))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, ("batch", "seq", "q_heads", "head_dim"))
+    k = ctx.constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    scale = hd**-0.5
+
+    if cache is None:
+        out = _attend(q, k, v, positions, positions, cfg, scale, ctx)
+        new_cache = None
+    else:
+        W = cache.window
+        if cache.rolling:
+            slots = positions % W
+            k_cache = cache.k.at[:, slots].set(k.astype(cache.k.dtype))
+            v_cache = cache.v.at[:, slots].set(v.astype(cache.v.dtype))
+            next_pos = positions[-1] + 1
+            kv_pos = rolling_slot_positions(next_pos, W)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, positions[0], 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, positions[0], 0, 0)
+            )
+            next_pos = positions[-1] + 1
+            kv_pos = jnp.arange(W, dtype=jnp.int32)
+            kv_pos = jnp.where(kv_pos < next_pos, kv_pos, -1)
+        k_cache = ctx.constrain(k_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        v_cache = ctx.constrain(v_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        out = _attend(q, k_cache, v_cache, positions, kv_pos, cfg, scale, ctx)
+        new_cache = KVCache(k=k_cache, v=v_cache, next_pos=next_pos, rolling=cache.rolling)
+
+    y = jnp.einsum("blhk,hkd->bld", out, ctx.weight(params["w_o"].astype(ad), ("q_heads", "head_dim", "embed")))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (minicpm3 / deepseek-style latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv(params: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig,
+             ctx: ShardingCtx = NO_SHARDING):
+    """Queries + new latent entries for x. Returns (q_nope, q_pe, ckv, kpe)."""
+    ad = cfg.dtype("act")
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        cq = rms_norm(x @ ctx.weight(params["w_dq"].astype(ad), ("embed", "latent")), params["q_norm"])
+        q = jnp.einsum("blr,rhk->blhk", cq, ctx.weight(params["w_uq"].astype(ad), ("latent", "q_heads", "head_dim")))
+    else:
+        q = jnp.einsum("bld,dhk->blhk", x, ctx.weight(params["w_q"].astype(ad), ("embed", "q_heads", "head_dim")))
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv = x @ ctx.weight(params["w_dkv"].astype(ad), ("embed", "latent"))  # [B, L, r_kv]
+    kpe = x @ ctx.weight(params["w_kpe"].astype(ad), ("embed", "head_dim"))  # [B, L, dr]
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_pe, ckv, kpe
+
+
+def _mla_attend_dense(
+    params: dict,
+    q_nope: jax.Array,  # [B, Lq, H, dn]
+    q_pe: jax.Array,  # [B, Lq, H, dr]
+    ckv: jax.Array,  # [B, S, r_kv] (normalized below)
+    kpe: jax.Array,  # [B, S, dr]
+    mask: jax.Array,  # [Lq, S]
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    ad = cfg.dtype("act")
+    up_axes = ("latent", "q_heads", "head_dim")
+    ckv_n = rms_norm(ckv, params["kv_norm"])
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_n, ctx.weight(params["w_uk"].astype(ad), up_axes))
+    v = jnp.einsum("bsr,rhk->bshk", ckv_n, ctx.weight(params["w_uv"].astype(ad), up_axes))
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    logits = jnp.einsum("blhk,bshk->bhls", q_nope, k_nope, preferred_element_type=jnp.float32)
+    logits = logits + jnp.einsum("blhk,bsk->bhls", q_pe, kpe, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, -1).astype(v.dtype)
+    out = jnp.einsum("bhls,bshk->blhk", probs, v, preferred_element_type=jnp.float32).astype(ad)
+    return jnp.einsum("blhk,hkd->bld", out, ctx.weight(params["w_o"].astype(ad), ("q_heads", "head_dim", "embed")))
+
+
+def _mla_attend_flash(
+    params: dict,
+    q_nope: jax.Array,  # [B, Lq, H, dn]
+    q_pe: jax.Array,  # [B, Lq, H, dr]
+    ckv: jax.Array,  # [B, S, r_kv]
+    kpe: jax.Array,  # [B, S, dr]
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    """Chunked MLA with *matrix absorption*: w_uk is folded into the query
+    (``q_eff = q_nope @ w_uk``) so attention runs entirely in the latent
+    space — KV blocks are raw [Kc, r_kv] cache slices, no per-block
+    key/value reconstruction. The value up-projection w_uv is applied once
+    to the accumulated latent output. This is the standard MLA decode
+    optimization; here it also bounds prefill memory.
+    """
+    ad = cfg.dtype("act")
+    B, Lq, H, dn = q_nope.shape
+    S, r = ckv.shape[1], ckv.shape[2]
+    dr = q_pe.shape[-1]
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    ckv_n = rms_norm(ckv, params["kv_norm"])
+    Qc = min(cfg.attn_q_chunk, Lq)
+    Kc = min(cfg.attn_kv_chunk, S)
+    Lq_p = -(-Lq // Qc) * Qc
+    S_p = -(-S // Kc) * Kc
+    q_nope = _pad_axis(q_nope, 1, Lq_p)
+    q_pe = _pad_axis(q_pe, 1, Lq_p)
+    q_pos_p = _pad_axis(q_pos, 0, Lq_p)
+    ckv_n = _pad_axis(ckv_n, 1, S_p)
+    kpe_p = _pad_axis(kpe, 1, S_p)
+    kv_pos_p = jnp.where(
+        jnp.arange(S_p) < S, _pad_axis(kv_pos, 0, S_p), jnp.asarray(-1, jnp.int32)
+    )
+    nq, nk = Lq_p // Qc, S_p // Kc
+
+    qnb = jnp.moveaxis(q_nope.reshape(B, nq, Qc, H, dn), 1, 0)
+    qpb = jnp.moveaxis(q_pe.reshape(B, nq, Qc, H, dr), 1, 0)
+    qposb = q_pos_p.reshape(nq, Qc)
+    cb = jnp.moveaxis(ckv_n.reshape(B, nk, Kc, r), 1, 0)
+    kpeb = jnp.moveaxis(kpe_p.reshape(B, nk, Kc, dr), 1, 0)
+    kposb = kv_pos_p.reshape(nk, Kc)
+    w_uk = ctx.weight(params["w_uk"].astype(ad), ("latent", "q_heads", "head_dim"))
+
+    @jax.checkpoint
+    def q_body(_, qblk):  # checkpointed — see _attend_flash
+        qn, qp, qpos = qblk
+        q_eff = jnp.einsum("bqhk,rhk->bqhr", qn, w_uk)  # absorbed query
+        m0 = jnp.full((B, H, Qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, Qc), jnp.float32)
+        o0 = jnp.zeros((B, Qc, H, r), jnp.float32)  # latent-space accumulator
+
+        def kv_body(carry, kvblk):
+            m, l, o = carry
+            cj, kj, kp = kvblk
+            s = jnp.einsum("bqhr,bsr->bhqs", q_eff, cj, preferred_element_type=jnp.float32)
+            s = s + jnp.einsum("bqhk,bsk->bhqs", qp, kj, preferred_element_type=jnp.float32)
+            s = s * scale
+            mask = attention_mask(qpos, kp, cfg.causal, cfg.sliding_window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None]
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pc = jnp.einsum("bhqs,bsr->bqhr", p.astype(ad), cj, preferred_element_type=jnp.float32)
+            o = o * alpha.transpose(0, 2, 1)[..., None] + pc
+            return (m_new, l, o), None
+
+        (m, l, o), _ = jax.lax.scan(kv_body, (m0, l0, o0), (cb, kpeb, kposb))
+        denom = l.transpose(0, 2, 1)[..., None]
+        out = jnp.where(denom > 0, o / jnp.maximum(denom, 1e-37), 0.0)
+        return 0, out.astype(ad)
+
+    _, outs = jax.lax.scan(q_body, 0, (qnb, qpb, qposb))  # [nq, B, Qc, H, r]
+    o_latent = jnp.moveaxis(outs, 0, 1).reshape(B, Lq_p, H, r)[:, :Lq]
+    out = jnp.einsum("blhr,rhk->blhk", o_latent, ctx.weight(params["w_uv"].astype(ad), ("latent", "q_heads", "head_dim")))
+    return jnp.einsum("blhk,hkd->bld", out, ctx.weight(params["w_o"].astype(ad), ("q_heads", "head_dim", "embed")))
+
+
+def _mla_attend_materialized(
+    params: dict,
+    q_nope: jax.Array,  # [B, Lq, H, dn]
+    q_pe: jax.Array,  # [B, Lq, H, dr]
+    ckv: jax.Array,  # [B, S, r_kv]
+    kpe: jax.Array,  # [B, S, dr]
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    """Long-Lq (prefill/training) path: reconstruct per-head k/v ONCE and run
+    the standard flash kernel. Absorption (latent-space attention) is a
+    decode-time win, but at prefill it contracts every logits block over
+    r_kv=256 instead of dn=64 — 4x the flops of just materializing
+    [B, S, H, dn+dv] up front (0.7 GB/device at 32k)."""
+    ad = cfg.dtype("act")
+    up_axes = ("latent", "q_heads", "head_dim")
+    ckv_n = rms_norm(ckv, params["kv_norm"])
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_n, ctx.weight(params["w_uk"].astype(ad), up_axes))
+    v = jnp.einsum("bsr,rhk->bshk", ckv_n, ctx.weight(params["w_uv"].astype(ad), up_axes))
+    H = q_nope.shape[2]
+    kpe_h = jnp.broadcast_to(kpe[:, :, None, :], (*kpe.shape[:2], H, kpe.shape[-1]))
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)  # [B, Lq, H, dn+dr]
+    k = jnp.concatenate([k_nope, kpe_h], axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = _attend_flash(
+        q, k, v, q_pos, kv_pos, cfg.causal, cfg.sliding_window, scale,
+        cfg.attn_q_chunk, cfg.attn_kv_chunk, cfg.flash_q_parallel, ctx,
+    )
+    return jnp.einsum("blhk,hkd->bld", out.astype(ad),
+                      ctx.weight(params["w_o"].astype(ad), ("q_heads", "head_dim", "embed")))
+
+
+def _mla_attend(
+    params: dict,
+    q_nope: jax.Array,
+    q_pe: jax.Array,
+    ckv: jax.Array,
+    kpe: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> jax.Array:
+    Lq, S = q_nope.shape[1], ckv.shape[1]
+    if Lq <= cfg.attn_q_chunk and S <= cfg.attn_kv_chunk:
+        mask = attention_mask(q_pos, kv_pos, cfg.causal, cfg.sliding_window)
+        return _mla_attend_dense(params, q_nope, q_pe, ckv, kpe, mask, cfg, ctx)
+    if Lq > cfg.attn_q_chunk:  # prefill / training: k,v worth materializing
+        return _mla_attend_materialized(params, q_nope, q_pe, ckv, kpe, q_pos, kv_pos, cfg, ctx)
+    return _mla_attend_flash(params, q_nope, q_pe, ckv, kpe, q_pos, kv_pos, cfg, ctx)
+
+
+def apply_mla(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+    cache: Optional[MLACache] = None,
+) -> tuple[jax.Array, Optional[MLACache]]:
+    ad = cfg.dtype("act")
+    x = x.astype(ad)
+    q_nope, q_pe, ckv, kpe = _mla_qkv(params, x, positions, cfg, ctx)
+
+    if cache is None:
+        return _mla_attend(params, q_nope, q_pe, ckv, kpe, positions, positions, cfg, ctx), None
+
+    S = cache.ckv.shape[1]
+    ckv_c = jax.lax.dynamic_update_slice(cache.ckv, ckv.astype(cache.ckv.dtype), (0, positions[0], 0))
+    kpe_c = jax.lax.dynamic_update_slice(cache.kpe, kpe.astype(cache.kpe.dtype), (0, positions[0], 0))
+    ckv_c = ctx.constrain(ckv_c, ("batch", "cache_seq", "latent"))
+    kpe_c = ctx.constrain(kpe_c, ("batch", "cache_seq", None))
+    next_pos = positions[-1] + 1
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    kv_pos = jnp.where(kv_pos < next_pos, kv_pos, -1)
+    y = _mla_attend(params, q_nope, q_pe, ckv_c, kpe_c, positions, kv_pos, cfg, ctx)
+    return y, MLACache(ckv=ckv_c, kpe=kpe_c, next_pos=next_pos)

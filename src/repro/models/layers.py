@@ -1,0 +1,171 @@
+"""Shared layer primitives: norms, rotary embeddings, MLP variants, embeddings.
+
+Every layer is a pair (``desc_x(cfg) -> descriptor tree``, ``apply_x(params,
+...) -> array``). Descriptors carry logical sharding axes (module.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.module import NO_SHARDING, ShardingCtx, TensorDesc, desc, fan_in_desc
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def desc_norm(cfg: ModelConfig, dim: int | None = None) -> dict:
+    d = dim or cfg.d_model
+    out = {"scale": desc((d,), ("act_embed",), init="ones", dtype=cfg.dtype("param"))}
+    if cfg.norm == "layernorm":
+        out["bias"] = desc((d,), ("act_embed",), init="zeros", dtype=cfg.dtype("param"))
+    return out
+
+
+def apply_norm(params: dict, x: jax.Array, cfg: ModelConfig, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm or LayerNorm; stats in fp32, output in input dtype."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim // 2] (fp32)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate [..., seq, heads, head_dim] by per-position angles.
+
+    ``positions``: [..., seq] int32. Split-half convention (llama).
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / GeGLU / squared-ReLU / GELU
+# ---------------------------------------------------------------------------
+
+
+def desc_mlp(cfg: ModelConfig, d_model: int | None = None, d_ff: int | None = None) -> dict:
+    dm = d_model or cfg.d_model
+    df = d_ff or cfg.d_ff
+    pd = cfg.dtype("param")
+    gated = cfg.mlp in ("swiglu", "geglu")
+    out = {
+        "w_up": fan_in_desc((dm, df), ("embed", "mlp"), dm, pd),
+        "w_down": fan_in_desc((df, dm), ("mlp", "embed"), df, pd),
+    }
+    if gated:
+        out["w_gate"] = fan_in_desc((dm, df), ("embed", "mlp"), dm, pd)
+    return out
+
+
+def apply_mlp(params: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx = NO_SHARDING) -> jax.Array:
+    """[..., d_model] -> [..., d_model]; activations in cfg.activation_dtype."""
+    ad = cfg.dtype("act")
+    x = x.astype(ad)
+    w_up = ctx.weight(params["w_up"].astype(ad), ("embed", "mlp"))
+    up = x @ w_up
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ ctx.weight(params["w_gate"].astype(ad), ("embed", "mlp"))) * up
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ ctx.weight(params["w_gate"].astype(ad), ("embed", "mlp")), approximate=True) * up
+    elif cfg.mlp == "relu2":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(up))
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(f"unknown mlp {cfg.mlp!r}")
+    h = ctx.constrain(h, ("batch", "seq", "mlp"))
+    return h @ ctx.weight(params["w_down"].astype(ad), ("mlp", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings + output head
+# ---------------------------------------------------------------------------
+
+
+def desc_embed(cfg: ModelConfig) -> dict:
+    pd = cfg.dtype("param")
+    out: dict = {}
+    if cfg.input_mode == "tokens":
+        # padded so the table shards over the model axis (apply_lm_head masks
+        # the padded tail out of the softmax)
+        out["tok"] = desc((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0, dtype=pd)
+    else:  # frames: a projection stub standing in for the modality frontend
+        out["frame_proj"] = fan_in_desc(
+            (cfg.frame_dim, cfg.d_model), ("embed_out", "embed"), cfg.frame_dim, pd
+        )
+    return out
+
+
+def apply_embed(params: dict, inputs: jax.Array, cfg: ModelConfig,
+                ctx: ShardingCtx = NO_SHARDING) -> jax.Array:
+    ad = cfg.dtype("act")
+    if cfg.input_mode == "tokens":
+        # use-constrained table: under ZERO rules the lookup runs against a
+        # [V/16, D] vocab-TP slice (masked local gather + small all-reduce);
+        # gathering from the raw (vocab x embed)-2D-sharded table makes GSPMD
+        # materialize batch-replicated [B, L, D/16] intermediates instead.
+        tok = ctx.weight(params["tok"].astype(ad), ("vocab", "embed"))
+        x = jnp.take(tok, inputs, axis=0)
+        return x
+    return (inputs.astype(ad) @ ctx.weight(params["frame_proj"].astype(ad), ("embed_out", "embed")))
+
+
+def desc_lm_head(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    pd = cfg.dtype("param")
+    # "embed_out" (data-only), not "embed": under ZERO rules the use-time
+    # vocab-TP spec must be reachable from storage without a full reshard
+    return {"w": fan_in_desc((cfg.d_model, cfg.padded_vocab), ("embed_out", "vocab"), cfg.d_model, pd)}
+
+
+def apply_lm_head(params: dict, embed_params: dict, x: jax.Array, cfg: ModelConfig,
+                  ctx: ShardingCtx = NO_SHARDING) -> jax.Array:
+    """Final-norm'd hidden states -> logits [..., padded_vocab] (fp32).
+
+    Padded vocab entries are masked to NEG_INF so they carry no softmax mass;
+    callers may slice [..., :vocab_size] when handing logits to users."""
+    ad = cfg.dtype("act")
+    if cfg.tie_embeddings:
+        w = ctx.weight(embed_params["tok"].astype(ad), ("vocab", "embed")).T
+    else:
+        w = ctx.weight(params["w"].astype(ad), ("embed_out", "vocab"))
+    logits = (x.astype(ad) @ w).astype(jnp.float32)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = -0.7 * float(jnp.finfo(jnp.float32).max)
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, logits, neg)
+    return logits

@@ -1,0 +1,294 @@
+"""Mamba2 / SSD (state-space duality) mixer, chunked for TPU.
+
+The SSD recurrence  S_t = a_t S_{t-1} + dt_t x_t B_t^T,  y_t = C_t S_t + D x_t
+(a_t = exp(dt_t * A_h), per-head scalar decay) is evaluated chunk-wise
+(arXiv:2405.21060 §6): within a chunk of Q tokens the quadratic
+"attention-like" form runs on the MXU; across chunks a cheap [H, P, N] state
+is carried by ``lax.scan``.
+
+TPU adaptation: the reference CUDA kernel materializes all [Q, Q] blocks at
+once; here each chunk's quadratic intermediates live only inside the scan
+body, bounding the working set to one chunk — the VMEM-sized tile the Pallas
+kernel (kernels/ssd_chunk.py) implements, with this module as the jnp
+reference semantics.
+
+Decode is the O(1) recurrence step on a [B, H, P, N] state plus a depthwise
+conv ring buffer — this is what makes the ``long_500k`` shape deployable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.module import NO_SHARDING, ShardingCtx, desc, fan_in_desc
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass
+class SSMState:
+    """Per-layer decode state: SSD state + causal-conv ring buffer."""
+
+    S: jax.Array  # [B, H, P, N] fp32
+    conv: jax.Array  # [B, d_conv - 1, conv_dim] activation dtype
+    next_pos: jax.Array  # [] int32
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def desc_mamba2(cfg: ModelConfig) -> dict:
+    """The reference fused in_proj [D, 2*di + 2GN + H] is split into
+    (w_z | w_xBC | w_dt): mathematically identical (independent columns,
+    same init law), but the fused width is rarely divisible by the model
+    axis (mamba2-130m: 3352 % 16 != 0) which silently replicates the
+    layer's biggest matmul on every tensor shard — a 12x per-device flop
+    regression found by the dry-run flop attribution."""
+    pd = cfg.dtype("param")
+    D, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    cd = conv_dim(cfg)
+    return {
+        "w_z": fan_in_desc((D, di), ("embed", "inner"), D, pd),
+        "w_xBC": fan_in_desc((D, cd), ("embed", "inner"), D, pd),
+        "w_dt": fan_in_desc((D, H), ("embed", "ssm_heads"), D, pd),
+        "conv_w": desc((cfg.ssm_conv, cd), ("conv", "inner"), scale=0.5, dtype=pd),
+        "conv_b": desc((cd,), ("inner",), init="zeros", dtype=pd),
+        "A_log": desc((H,), ("ssm_heads",), init="normal", scale=0.5, dtype=jnp.float32),
+        "dt_bias": desc((H,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D": desc((H,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "norm_scale": desc((di,), ("inner",), init="ones", dtype=pd),
+        "out_proj": fan_in_desc((di, D), ("inner", "embed"), di, pd),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    return SSMState(
+        S=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), cfg.dtype("act")),
+        next_pos=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, L, H, P] (activation dtype)
+    dt: jax.Array,  # [B, L, H] fp32, post-softplus
+    A: jax.Array,  # [H] fp32, negative
+    Bm: jax.Array,  # [B, L, G, N]
+    Cm: jax.Array,  # [B, L, G, N]
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, N] fp32
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B, L, H, P], final_state [B, H, P, N]).
+
+    L must be a multiple of ``chunk`` (callers pad). All decay math in fp32.
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = chunk
+    nc = L // Q
+    ad = x.dtype
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    # groups kept narrow here; the expansion to heads happens per chunk inside
+    # the scan body — expanding [B, L, G, N] -> [B, L, H, N] up front would be
+    # saved as scan inputs for the backward pass (19 GB at 1M tokens, G=1).
+    Bg = Bm.reshape(Bsz, nc, Q, G, N)
+    Cg = Cm.reshape(Bsz, nc, Q, G, N)
+
+    log_a = dtc * A  # [B, nc, Q, H], negative
+    ell = jnp.cumsum(log_a, axis=2)  # inclusive cumulative log-decay
+
+    S0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))  # i >= j
+
+    def chunk_body(S, inp):
+        xq, dtq, Bq, Cq, ellq = inp  # per-chunk slices, [B, Q, ...]
+        Bq = jnp.repeat(Bq, rep, axis=2)  # [B, Q, H, N]
+        Cq = jnp.repeat(Cq, rep, axis=2)
+        # intra-chunk quadratic form
+        seg = ellq[:, :, None, :] - ellq[:, None, :, :]  # [B, Q(i), Q(j), H]
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)  # fp32
+        CB = jnp.einsum("bihn,bjhn->bijh", Cq.astype(jnp.float32), Bq.astype(jnp.float32))
+        M = (CB * Lmat).astype(ad)  # [B, Q, Q, H]
+        dtx = (dtq[..., None] * xq.astype(jnp.float32)).astype(ad)  # [B, Q, H, P]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, dtx, preferred_element_type=jnp.float32)
+        # inter-chunk: previous state decayed to each position
+        decay_in = jnp.exp(ellq)  # [B, Q, H]
+        y_inter = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", Cq.astype(jnp.float32), S, decay_in,
+            preferred_element_type=jnp.float32,
+        )
+        # state update
+        ell_last = ellq[:, -1, :]  # [B, H]
+        w = jnp.exp(ell_last[:, None, :] - ellq) * dtq  # [B, Q, H]
+        S_chunk = jnp.einsum(
+            "bqhn,bqh,bqhp->bhpn", Bq.astype(jnp.float32), w, xq.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        S_new = jnp.exp(ell_last)[..., None, None] * S + S_chunk
+        return S_new, (y_intra + y_inter).astype(ad)
+
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(Bg, 1, 0),
+        jnp.moveaxis(Cg, 1, 0),
+        jnp.moveaxis(ell, 1, 0),
+    )
+    S_final, ys = jax.lax.scan(chunk_body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, P)
+    return y, S_final
+
+
+def ssd_step(
+    x: jax.Array,  # [B, H, P]
+    dt: jax.Array,  # [B, H] fp32 post-softplus
+    A: jax.Array,  # [H]
+    Bm: jax.Array,  # [B, G, N]
+    Cm: jax.Array,  # [B, G, N]
+    S: jax.Array,  # [B, H, P, N] fp32
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. Returns (y [B, H, P], S')."""
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # [B, H, N]
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(dt * A)  # [B, H]
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32), Bh)
+    S_new = a[..., None, None] * S + upd
+    y = jnp.einsum("bhpn,bhn->bhp", S_new, Ch)
+    return y.astype(x.dtype), S_new
+
+
+# ---------------------------------------------------------------------------
+# Naive reference (test oracle)
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, A, Bm, Cm, initial_state=None):
+    """Token-by-token recurrence in fp64-ish fp32 — oracle for the chunked form."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    S = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    def step(S, t):
+        y, S_new = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], S)
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(step, S, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1), S_final
+
+
+# ---------------------------------------------------------------------------
+# Full mixer block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, L, C] with kernel [K, C]."""
+    K = w.shape[0]
+    ad = xBC.dtype
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for k in range(K):  # K = 4: unrolled adds beat a conv call at this size
+        out = out + pad[:, k : k + xBC.shape[1], :].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(ad)
+
+
+def apply_mamba2(
+    params: dict,
+    x: jax.Array,  # [B, L, D]
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+    state: Optional[SSMState] = None,
+    return_state: bool = False,
+) -> tuple[jax.Array, Optional[SSMState]]:
+    """Full mixer. Without ``state``: chunked parallel form over L (train /
+    prefill; pass return_state=True to also build the decode state). With
+    ``state`` and L == 1: the O(1) decode step."""
+    ad = cfg.dtype("act")
+    Bsz, L, D = x.shape
+    di, H, P, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xa = x.astype(ad)
+    z = ctx.constrain(xa @ ctx.weight(params["w_z"].astype(ad), ("embed", "inner")), ("batch", "seq", "inner"))
+    xBC = ctx.constrain(xa @ ctx.weight(params["w_xBC"].astype(ad), ("embed", "inner")), ("batch", "seq", "inner"))
+    dt_raw = xa @ ctx.weight(params["w_dt"].astype(ad), ("embed", "ssm_heads"))
+
+    decode = state is not None and L == 1
+    if decode:
+        window = jnp.concatenate([state.conv, xBC], axis=1)  # [B, K, cd]
+        conv_out = (
+            jnp.sum(window.astype(jnp.float32) * params["conv_w"].astype(jnp.float32), axis=1)
+            + params["conv_b"].astype(jnp.float32)
+        ).astype(ad)[:, None, :]
+        new_conv = window[:, 1:, :]
+    else:
+        conv_out = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        new_conv = None
+        if return_state:
+            K = cfg.ssm_conv
+            tail = xBC[:, -(K - 1) :, :]
+            padlen = (K - 1) - tail.shape[1]
+            new_conv = jnp.pad(tail, ((0, 0), (padlen, 0), (0, 0)))
+    xBC = jax.nn.silu(conv_out)
+
+    x_ssm = xBC[..., :di].reshape(Bsz, L, H, P)
+    Bm = xBC[..., di : di + G * N].reshape(Bsz, L, G, N)
+    Cm = xBC[..., di + G * N :].reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B, L, H]
+
+    if decode:
+        y, S_new = ssd_step(x_ssm[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], state.S)
+        y = y[:, None]
+        new_state = SSMState(S=S_new, conv=new_conv, next_pos=state.next_pos + 1)
+    else:
+        S0 = state.S if state is not None else None
+        pad_to = -(-L // cfg.ssm_chunk) * cfg.ssm_chunk
+        if pad_to != L:
+            padding = pad_to - L
+            x_p = jnp.pad(x_ssm, ((0, 0), (0, padding), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, padding), (0, 0)))
+            B_p = jnp.pad(Bm, ((0, 0), (0, padding), (0, 0), (0, 0)))
+            C_p = jnp.pad(Cm, ((0, 0), (0, padding), (0, 0), (0, 0)))
+            y, S_new = ssd_chunked(x_p, dt_p, A, B_p, C_p, cfg.ssm_chunk, S0)
+            y = y[:, :L]
+        else:
+            y, S_new = ssd_chunked(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk, S0)
+        new_state = (
+            SSMState(
+                S=S_new,
+                conv=new_conv,
+                next_pos=(state.next_pos if state is not None else 0) + L,
+            )
+            if return_state
+            else None
+        )
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * x_ssm.astype(jnp.float32)
+    y = y.reshape(Bsz, L, di).astype(ad)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(ad), params["norm_scale"])
+    out = y @ ctx.weight(params["out_proj"].astype(ad), ("inner", "embed"))
+    return out, new_state

@@ -1,0 +1,257 @@
+"""Config -> model builder: one object tying descriptors, forward passes,
+caches and sharding together for every assigned architecture.
+
+The same ``LMModel`` drives training (``forward``), inference
+(``prefill`` / ``decode``) and the multi-pod dry-run (``abstract`` /
+``abstract_cache`` — ShapeDtypeStructs, zero allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.attention import KVCache, MLACache
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_embed,
+    apply_lm_head,
+    apply_norm,
+    desc_embed,
+    desc_lm_head,
+    desc_norm,
+)
+from repro.models.mamba2 import SSMState
+from repro.models.module import (
+    NO_SHARDING,
+    ShardingCtx,
+    ShardingRules,
+    abstract_params,
+    init_params,
+    param_shardings,
+    param_specs,
+    resolve_spec,
+)
+from repro.models.transformer import HybridCache
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LMModel:
+    """A built architecture. Stateless: params/caches are passed explicitly."""
+
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+
+    def descs(self) -> Tree:
+        cfg = self.cfg
+        out = {
+            "embed": desc_embed(cfg),
+            "stack": transformer.desc_stack(cfg),
+            "ln_final": desc_norm(cfg),
+            "head": desc_lm_head(cfg),
+        }
+        return out
+
+    def init(self, key: jax.Array) -> Tree:
+        return init_params(key, self.descs())
+
+    def abstract(self) -> Tree:
+        return abstract_params(self.descs())
+
+    def specs(self, rules: ShardingRules, mesh: Mesh) -> Tree:
+        return param_specs(self.descs(), rules, mesh)
+
+    def shardings(self, rules: ShardingRules, mesh: Mesh) -> Tree:
+        return param_shardings(self.descs(), rules, mesh)
+
+    def num_params(self) -> int:
+        return sum(
+            int(math.prod(d.shape))
+            for d in jax.tree.leaves(self.descs(), is_leaf=lambda x: hasattr(x, "axes"))
+        )
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: top-k of experts)."""
+        cfg = self.cfg
+        total = self.num_params()
+        if not cfg.num_experts:
+            return total
+        gated = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        expert = gated * cfg.d_model * cfg.d_ff
+        inactive = cfg.num_layers * (cfg.num_experts - cfg.num_experts_per_tok) * expert
+        return total - inactive
+
+    def matmul_params(self) -> int:
+        """Active params that participate in matmuls per token — the N of the
+        6·N·D MODEL_FLOPS convention. The input-embedding gather is not a
+        matmul, so the table is excluded; with tied embeddings the table *is*
+        the head matmul, so it stays counted once."""
+        n = self.active_params()
+        if self.cfg.input_mode == "tokens" and not self.cfg.tie_embeddings:
+            n -= self.cfg.padded_vocab * self.cfg.d_model
+        return n
+
+    # ------------------------------------------------------------------
+    # Forward passes
+    # ------------------------------------------------------------------
+
+    def _embed(self, params: Tree, inputs: jax.Array, ctx: ShardingCtx) -> jax.Array:
+        cfg = self.cfg
+        x = apply_embed(params["embed"], inputs, cfg, ctx)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        return ctx.constrain(x, ("batch", "seq", "act_embed"))
+
+    def _head(self, params: Tree, x: jax.Array, ctx: ShardingCtx = NO_SHARDING) -> jax.Array:
+        x = apply_norm(params["ln_final"], x, self.cfg)
+        return apply_lm_head(params["head"], params["embed"], x, self.cfg, ctx)
+
+    def hidden(
+        self,
+        params: Tree,
+        inputs: jax.Array,
+        positions: Optional[jax.Array] = None,
+        ctx: ShardingCtx = NO_SHARDING,
+    ) -> tuple[jax.Array, dict]:
+        """Backbone only: final-norm'd hidden states [B, L, D] + metrics.
+        The training loss chunks the (huge-vocab) head over this output."""
+        L = inputs.shape[1]
+        if positions is None:
+            positions = jnp.arange(L, dtype=jnp.int32)
+        x = self._embed(params, inputs, ctx)
+        x, _, metrics = transformer.apply_stack(params["stack"], x, positions, self.cfg, ctx)
+        return apply_norm(params["ln_final"], x, self.cfg), metrics
+
+    def logits(self, params: Tree, hidden: jax.Array, ctx: ShardingCtx = NO_SHARDING) -> jax.Array:
+        """LM head over (already final-norm'd) hidden states."""
+        return apply_lm_head(params["head"], params["embed"], hidden, self.cfg, ctx)
+
+    def forward(
+        self,
+        params: Tree,
+        inputs: jax.Array,  # tokens [B, L] int32 | frames [B, L, frame_dim]
+        positions: Optional[jax.Array] = None,  # [L] int32
+        ctx: ShardingCtx = NO_SHARDING,
+    ) -> tuple[jax.Array, dict]:
+        """Stateless training/encoder forward. Returns (logits [B,L,V], metrics)."""
+        x, metrics = self.hidden(params, inputs, positions, ctx)
+        return self.logits(params, x, ctx), metrics
+
+    def prefill(
+        self,
+        params: Tree,
+        inputs: jax.Array,
+        cache: Tree,
+        positions: Optional[jax.Array] = None,
+        ctx: ShardingCtx = NO_SHARDING,
+    ) -> tuple[jax.Array, Tree]:
+        """Fill the cache with a prompt; returns (last-position logits, cache')."""
+        L = inputs.shape[1]
+        if positions is None:
+            positions = jnp.arange(L, dtype=jnp.int32)
+        x = self._embed(params, inputs, ctx)
+        x, new_cache, _ = transformer.apply_stack(
+            params["stack"], x, positions, self.cfg, ctx, caches=cache, return_state=True
+        )
+        logits = self._head(params, x[:, -1:, :], ctx)
+        return logits, new_cache
+
+    def decode(
+        self,
+        params: Tree,
+        tokens: jax.Array,  # [B, 1] int32 (or [B, 1, frame_dim])
+        cache: Tree,
+        positions: jax.Array,  # [1] int32 absolute position
+        ctx: ShardingCtx = NO_SHARDING,
+    ) -> tuple[jax.Array, Tree]:
+        """One-token decode step. Returns (logits [B,1,V], cache')."""
+        x = self._embed(params, tokens, ctx)
+        x, new_cache, _ = transformer.apply_stack(
+            params["stack"], x, positions, self.cfg, ctx, caches=cache
+        )
+        return self._head(params, x, ctx), new_cache
+
+    # ------------------------------------------------------------------
+    # Caches
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> Tree:
+        return transformer.init_caches(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int) -> Tree:
+        return transformer.abstract_caches(self.cfg, batch, max_len)
+
+    def cache_specs(self, rules: ShardingRules, mesh: Mesh, batch: int, max_len: int) -> Tree:
+        """PartitionSpec tree matching ``init_cache``'s structure."""
+        abstract = self.abstract_cache(batch, max_len)
+        if abstract is None:
+            return None
+        axes = _cache_axes(self.cfg)
+        return jax.tree.map(
+            lambda leaf, ax: resolve_spec(leaf.shape, ax, rules, mesh),
+            abstract,
+            axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def cache_shardings(self, rules: ShardingRules, mesh: Mesh, batch: int, max_len: int) -> Tree:
+        specs = self.cache_specs(rules, mesh, batch, max_len)
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Cache logical axes (per family) — mirrors transformer.init_caches structure
+# ---------------------------------------------------------------------------
+
+
+def _kv_axes(lead: tuple[str, ...], rolling: bool = False) -> KVCache:
+    return KVCache(
+        k=(*lead, "batch", "cache_seq", "kv_heads", "kv_head_dim"),
+        v=(*lead, "batch", "cache_seq", "kv_heads", "kv_head_dim"),
+        next_pos=lead,
+        rolling=rolling,  # static field must match the real cache's pytree aux
+    )
+
+
+def _mla_axes(lead: tuple[str, ...]) -> MLACache:
+    return MLACache(
+        ckv=(*lead, "batch", "cache_seq", "latent"),
+        kpe=(*lead, "batch", "cache_seq", None),
+        next_pos=lead,
+    )
+
+
+def _ssm_axes(lead: tuple[str, ...]) -> SSMState:
+    return SSMState(
+        S=(*lead, "batch", "ssm_heads", None, "state"),
+        conv=(*lead, "batch", "conv", "inner"),
+        next_pos=lead,
+    )
+
+
+def _cache_axes(cfg: ModelConfig) -> Tree:
+    rolling = cfg.sliding_window is not None
+    if cfg.family == "ssm":
+        return _ssm_axes(("layers",))
+    if cfg.family == "hybrid":
+        return HybridCache(ssm=_ssm_axes(("layers", None)), attn=_kv_axes(("layers",), rolling))
+    if cfg.attention == "mla":
+        return _mla_axes(("layers",))
+    return _kv_axes(("layers",), rolling)
+
+
+def build_model(cfg: ModelConfig) -> LMModel:
+    return LMModel(cfg=cfg)

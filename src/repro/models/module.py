@@ -1,0 +1,324 @@
+"""Minimal pure-JAX parameter system with logical sharding axes.
+
+Every weight is declared once as a :class:`TensorDesc` — shape, logical axis
+names, init law. From one descriptor tree we derive, consistently:
+
+  * materialized params            (``init_params``)
+  * abstract params for the dry-run (``abstract_params`` — ShapeDtypeStruct,
+    no allocation)
+  * PartitionSpecs                  (``param_specs`` via :class:`ShardingRules`)
+
+Logical axis names are mapped to physical mesh axes by ``ShardingRules``; a
+dimension whose size does not divide the mapped mesh-axis product silently
+falls back to replication for that dim (GSPMD would otherwise pad — we prefer
+the explicit, predictable layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict[str, ...] of jax.Array
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorDesc:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim
+    init: str = "normal"  # normal | zeros | ones | trunc_fan_in | scaled
+    scale: float = 1.0  # stddev for normal/scaled init
+    dtype: Any = jnp.float32
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def desc(shape: tuple[int, ...], axes: tuple[str | None, ...], init: str = "normal",
+         scale: float = 1.0, dtype: Any = jnp.float32) -> TensorDesc:
+    return TensorDesc(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def fan_in_desc(shape: tuple[int, ...], axes: tuple[str | None, ...], fan_in: int,
+                dtype: Any = jnp.float32) -> TensorDesc:
+    """He/LeCun-style 1/sqrt(fan_in) normal init."""
+    return TensorDesc(tuple(shape), tuple(axes), "normal", 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+def stacked(tree: Tree, num: int, axis_name: str = "layers") -> Tree:
+    """Prepend a stacking dim (for scan-over-layers) to every descriptor."""
+    return jax.tree.map(
+        lambda d: TensorDesc((num, *d.shape), (axis_name, *d.axes), d.init, d.scale, d.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, TensorDesc),
+    )
+
+
+def _is_desc(x: Any) -> bool:
+    return isinstance(x, TensorDesc)
+
+
+def _init_leaf(key: jax.Array, d: TensorDesc) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init in ("normal", "scaled"):
+        return (d.scale * jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def _path_str(path: tuple) -> str:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(out)
+
+
+def init_params(key: jax.Array, descs: Tree) -> Params:
+    """Materialize a descriptor tree. Each leaf gets a path-derived key."""
+    flat = jax.tree_util.tree_flatten_with_path(descs, is_leaf=_is_desc)[0]
+
+    def leaf(path, d):
+        k = jax.random.fold_in(key, hash(_path_str(path)) % (2**31))
+        return _init_leaf(k, d)
+
+    leaves = {_path_str(p): leaf(p, d) for p, d in flat}
+    treedef = jax.tree_util.tree_structure(descs, is_leaf=_is_desc)
+    return jax.tree_util.tree_unflatten(treedef, [leaves[_path_str(p)] for p, _ in flat])
+
+
+def abstract_params(descs: Tree) -> Params:
+    """ShapeDtypeStruct tree — the dry-run stand-in, no allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), descs, is_leaf=_is_desc
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical sharding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to mesh axis (tuples).
+
+    ``None`` value = replicate. Missing key = replicate. ``table`` shards
+    parameter STORAGE and activations; ``use_table`` (optional) shards
+    parameters at USE time (ShardingCtx.weight) — the storage/use split is
+    what expresses ZeRO/FSDP: stored sharded over many axes, gathered (or
+    partially gathered) right before the matmul. With ``use_table=None``,
+    weight-use falls back to "storage spec minus the FSDP axes".
+    Per-shape divisibility is checked at resolution time.
+    """
+
+    table: Mapping[str, tuple[str, ...] | str | None]
+    use_table: Mapping[str, tuple[str, ...] | str | None] | None = None
+
+    def mesh_axes(self, logical: str | None, use: bool = False) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        if use and self.use_table is not None:
+            v = self.use_table.get(logical)  # missing key = replicated at use
+        else:
+            v = self.table.get(logical)
+        if v is None:
+            return ()
+        return (v,) if isinstance(v, str) else tuple(v)
+
+
+# Default rules: 2D weight sharding ("fsdp" over data x "tensor" over model),
+# batch data-parallel over (pod, data). See DESIGN.md §LM-sharding.
+TRAIN_RULES = ShardingRules(
+    table={
+        "batch": ("pod", "data"),
+        "seq": None,
+        "vocab": ("model",),
+        "embed": ("data",),
+        "embed_out": ("data",),
+        "mlp": ("model",),
+        "q_heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": None,
+        "kv_head_dim": None,
+        "experts": None,
+        "layers": None,
+        "inner": ("model",),  # mamba d_inner / ssm heads
+        "ssm_heads": ("model",),
+        "state": None,
+        "conv": None,
+        "latent": None,  # MLA lora ranks
+        "act_embed": None,  # activation d_model axis
+        "cache_seq": None,
+        # the loss/head boundary: batch over (pod, data) ONLY — the vocab-TP
+        # head needs the model axis free; constraining per loss CHUNK keeps
+        # the reshard small (train.py)
+        "loss_batch": ("pod", "data"),
+        # flash q-block axis for sequence-parallel prefill (attention.py)
+        "qblocks": ("model",),
+    }
+)
+
+# Serving: no optimizer state; weights 2D-sharded the same way, batch over
+# (pod, data). The KV cache is sequence-sharded over "model" — at decode this
+# lowers to flash-decoding-style parallelism (partial softmax per shard +
+# small all-reduces of the [B,1,H,dv] partials), and it is what bounds the
+# 32k/500k cache to per-chip HBM (kv_heads often don't divide the model axis,
+# so head-sharding alone would replicate multi-TB caches).
+SERVE_RULES = ShardingRules(table={**TRAIN_RULES.table, "cache_seq": ("model",)})
+
+# Decode: weights are used AS STORED (resident tensor-parallel, zero
+# per-token gathers — use_table == table); the per-layer partial-sum
+# all-reduces are [B, 1, D]-sized, i.e. negligible at one token. Prefill
+# keeps SERVE_RULES (gather-at-use amortizes over the 32k-token prompt).
+DECODE_RULES = ShardingRules(table=SERVE_RULES.table, use_table=SERVE_RULES.table)
+
+# Pure-ZeRO training rules: the batch is sharded over EVERY mesh axis
+# (1 sequence per chip at the assigned train shapes), weights are STORED
+# 2D-sharded (same as TRAIN_RULES) and fully gathered at use — except the
+# vocabulary head, which stays tensor-parallel so the [B, L, V] logits and
+# the multi-GB head matmul never materialize unsharded. Rationale
+# (EXPERIMENTS.md §Perf iterations 1-3): with batch over only (pod, data),
+# tensor-parallel layers all-reduce [B_dev, L, D]-sized activations every
+# layer (~430 GB wire/step for yi-6b); with one row per chip the layer
+# weights (tens-hundreds of MB) are the only per-layer collective.
+ZERO_RULES = ShardingRules(
+    table={
+        **TRAIN_RULES.table,
+        "batch": ("pod", "data", "model"),
+        "embed": ("data", "model"),  # storage: 256/512-way on the embed dim
+        "mlp": None,
+        "q_heads": None,
+        "kv_heads": None,
+        "inner": None,
+        "ssm_heads": None,
+        "latent": None,
+    },
+    use_table={"vocab": ("model",)},
+)
+
+
+def resolve_spec(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    rules: ShardingRules,
+    mesh: Mesh,
+    use: bool = False,
+) -> P:
+    """PartitionSpec for one tensor.
+
+    A dim that does not divide the full mapped mesh-axis product falls back
+    to progressively shorter PREFIXES of the axis tuple (e.g. batch=256 on
+    ("pod","data","model")=512 devices resolves to ("pod","data")=32-way),
+    and to replication only when no prefix divides."""
+    used: set[str] = set()
+    out: list[tuple[str, ...] | None] = []
+    for dim, ax in zip(shape, axes):
+        names = rules.mesh_axes(ax, use=use)
+        names = tuple(n for n in names if n in mesh.shape and n not in used)
+        chosen: tuple[str, ...] | None = None
+        while names:
+            prod = int(np.prod([mesh.shape[n] for n in names]))
+            if dim > 0 and dim % prod == 0:
+                chosen = names
+                break
+            names = names[:-1]
+        if chosen:
+            out.append(chosen)
+            used.update(chosen)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*[o if o is None else (o[0] if len(o) == 1 else o) for o in out])
+
+
+def param_specs(descs: Tree, rules: ShardingRules, mesh: Mesh) -> Tree:
+    return jax.tree.map(
+        lambda d: resolve_spec(d.shape, d.axes, rules, mesh), descs, is_leaf=_is_desc
+    )
+
+
+def param_shardings(descs: Tree, rules: ShardingRules, mesh: Mesh) -> Tree:
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, resolve_spec(d.shape, d.axes, rules, mesh)),
+        descs,
+        is_leaf=_is_desc,
+    )
+
+
+def shard_init(key: jax.Array, descs: Tree, rules: ShardingRules, mesh: Mesh) -> Params:
+    """Materialize params directly with their target sharding (no host copy)."""
+    shardings = param_shardings(descs, rules, mesh)
+    return jax.jit(lambda k: init_params(k, descs), out_shardings=shardings)(key)
+
+
+def logical(x: jax.Array, axes: tuple[str | None, ...], rules: ShardingRules | None,
+            mesh: Mesh | None) -> jax.Array:
+    """with_sharding_constraint by logical activation axes (no-op without mesh)."""
+    if rules is None or mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_spec(x.shape, axes, rules, mesh))
+    )
+
+
+FSDP_AXES = ("data", "pod")  # mesh axes weights are *stored* sharded over
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Threaded through model apply fns; None fields = single-device run."""
+
+    mesh: Mesh | None = None
+    rules: ShardingRules | None = None
+
+    def constrain(self, x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+        return logical(x, axes, self.rules, self.mesh)
+
+    def weight(self, w: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+        """Manual FSDP: a weight is *stored* sharded over (data, model) but
+        *used* gathered over the fsdp axes (tensor sharding kept). Without
+        this, GSPMD resolves the contraction-dim sharding inside scan bodies
+        by ALL-REDUCING activations ([B, L, ...] per layer — 100s of GB/step)
+        instead of all-gathering the small weight. Call it on the weight
+        already cast to the compute dtype so the gather moves bf16."""
+        if self.rules is None or self.mesh is None:
+            return w
+        # First pin the STORAGE spec. Forward: a no-op (the sliced stacked
+        # param already carries it). Backward: with_sharding_constraint's
+        # transpose applies the SAME spec to the cotangent, so each layer's
+        # weight gradient is reduce-scattered back to its shards right here —
+        # without this, the replicated cotangents of the gathered weights
+        # accumulate into a full-size stacked gradient buffer inside the
+        # layer scan (260 GB for nemotron-340b).
+        store = resolve_spec(w.shape, axes, self.rules, self.mesh)
+        w = jax.lax.with_sharding_constraint(w, NamedSharding(self.mesh, store))
+        if self.rules.use_table is not None:
+            # explicit use-time table (ZeRO rules: replicated except the head)
+            spec = resolve_spec(w.shape, axes, self.rules, self.mesh, use=True)
+            return jax.lax.with_sharding_constraint(w, NamedSharding(self.mesh, spec))
+
+        def drop(e):
+            if e is None:
+                return None
+            names = (e,) if isinstance(e, str) else tuple(e)
+            names = tuple(n for n in names if n not in FSDP_AXES)
+            return None if not names else (names[0] if len(names) == 1 else names)
+
+        gathered = P(*[drop(e) for e in store])
+        return jax.lax.with_sharding_constraint(w, NamedSharding(self.mesh, gathered))
+
+
+NO_SHARDING = ShardingCtx()

@@ -1,0 +1,152 @@
+"""Top-2 Mixture-of-Experts with capacity-based einsum dispatch (GShard style).
+
+TPU adaptation: ragged token->expert routing (the GPU/megablocks formulation)
+becomes grouped one-hot contractions — tokens are split into fixed-size
+groups, each group dispatches into a [E, C] capacity buffer via one-hot
+matmuls that the MXU executes natively. Tokens overflowing an expert's
+capacity are dropped (standard GShard semantics); the residual connection
+carries them through.
+
+The paper connection (DESIGN.md §5): expert capacity planning is the same
+fixed-cost + per-item-cost balancing idea as BPMF's §IV-B workload model —
+``capacity_factor`` plays the role of the padding the LPT partition bounds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.module import NO_SHARDING, ShardingCtx, fan_in_desc
+
+MOE_GROUP = 2048  # tokens per dispatch group (divides every assigned seq_len)
+
+
+def desc_moe(cfg: ModelConfig) -> dict:
+    pd = cfg.dtype("param")
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    out = {
+        "router": fan_in_desc((D, E), ("embed", None), D, pd),
+        "w_up": fan_in_desc((E, D, F), ("experts", "embed", "mlp"), D, pd),
+        "w_down": fan_in_desc((E, F, D), ("experts", "mlp", "embed"), F, pd),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        out["w_gate"] = fan_in_desc((E, D, F), ("experts", "embed", "mlp"), D, pd)
+    return out
+
+
+def _activation(h_gate: jax.Array | None, h_up: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        return jax.nn.silu(h_gate) * h_up
+    if cfg.mlp == "geglu":
+        return jax.nn.gelu(h_gate, approximate=True) * h_up
+    if cfg.mlp == "relu2":
+        return jnp.square(jax.nn.relu(h_up))
+    return jax.nn.gelu(h_up, approximate=True)
+
+
+def _moe_group(
+    params: dict,
+    xt: jax.Array,  # [g, D] one dispatch group
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+) -> tuple[jax.Array, dict]:
+    """Route + dispatch + expert-compute one token group."""
+    ad = cfg.dtype("act")
+    g, D = xt.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+
+    # --- routing (fp32) ---
+    logits = (xt @ params["router"].astype(ad)).astype(jnp.float32)  # [g, E]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [g, K]
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)  # mixtral renormalizes
+
+    C = int(g * K * cfg.capacity_factor / E)
+    C = max(8, -(-C // 8) * 8)
+
+    # --- capacity assignment: slot = rank of the token among same-expert picks
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # [g, K, E]
+    # priority: slot k=0 first (GShard), then position in group
+    flat = onehot.transpose(1, 0, 2).reshape(K * g, E)  # [K*g, E]
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat  # [K*g, E] rank among picks
+    pos = jnp.sum(pos_in_e * flat, -1).astype(jnp.int32)  # [K*g] slot index per pick
+    keep = (pos < C) & (jnp.sum(flat, -1) > 0)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]  # [K*g, C]
+    disp_flat = flat[..., None] * pos_oh[..., None, :]  # [K*g, E, C]
+    dispatch = disp_flat.reshape(K, g, E, C).transpose(1, 0, 2, 3)  # [g, K, E, C]
+
+    gate_w = top_p[..., None, None] * jax.nn.one_hot(top_e, E, dtype=jnp.float32)[..., None]
+    combine = jnp.sum(gate_w * dispatch, axis=1)  # [g, E, C]
+    dispatch_b = jnp.sum(dispatch, axis=1).astype(ad)  # [g, E, C] 0/1
+
+    # --- expert computation ---
+    expert_in = jnp.einsum("tec,td->ecd", dispatch_b, xt)  # [E, C, D]
+    h_up = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"].astype(ad))
+    h_gate = (
+        jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"].astype(ad))
+        if "w_gate" in params
+        else None
+    )
+    h = _activation(h_gate, h_up, cfg)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(ad))
+    y = jnp.einsum("tec,ecd->td", combine.astype(ad), expert_out)
+
+    # --- losses / metrics ---
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    top1 = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(top1, axis=0)  # fraction of tokens routed (top-1)
+    aux_loss = E * jnp.sum(me * ce)
+    router_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, -1)))
+    drop = 1.0 - jnp.sum(dispatch_b) / (g * K)
+    metrics = {"aux_loss": aux_loss, "router_z": router_z, "drop_fraction": drop}
+    return y, metrics
+
+
+def apply_moe(
+    params: dict,
+    x: jax.Array,  # [B, L, D]
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+) -> tuple[jax.Array, dict]:
+    """Returns (y [B, L, D], metrics{aux_loss, router_z, drop_fraction}).
+
+    Memory bounding at long sequence: each batch row is split along L into
+    MOE_GROUP-sized dispatch groups; the group axis runs under ``lax.scan``
+    (unsharded — scanning a *batch*-sharded axis would serialize data
+    parallelism), batch rows run vmapped. Only one [B_shard, g, E, C]
+    dispatch/combine block is live at a time; the all-at-once formulation
+    materializes TBs at 1M-token prefill. Groups never straddle batch rows,
+    so routing is per-sequence (standard for inference too: at decode L=1
+    each token is its own group, capacity >= K, no drops).
+    """
+    ad = cfg.dtype("act")
+    B, L, D = x.shape
+    if L >= MOE_GROUP and L % MOE_GROUP == 0:
+        g, n = MOE_GROUP, L // MOE_GROUP
+    else:
+        g, n = L, 1
+    xt = x.reshape(B, n, g, D).astype(ad)
+
+    # manual-FSDP gather of the expert bank, once per layer, outside the
+    # group scan (module.ShardingCtx.weight)
+    pw = {"router": ctx.weight(params["router"].astype(ad), ("embed", None))}
+    for name, axes in (("w_up", ("experts", "embed", "mlp")),
+                       ("w_down", ("experts", "mlp", "embed")),
+                       ("w_gate", ("experts", "embed", "mlp"))):
+        if name in params:
+            pw[name] = ctx.weight(params[name].astype(ad), axes)
+
+    group_fn = jax.vmap(lambda xg: _moe_group(pw, xg, cfg, ctx))  # over batch
+
+    if n == 1:
+        y, metrics = group_fn(xt[:, 0])
+    else:
+        def body(_, xg):  # xg: [B, g, D]
+            return 0, group_fn(xg)
+
+        _, (ys, ms) = jax.lax.scan(body, 0, jnp.moveaxis(xt, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)  # [B, n, g, D]
+        metrics = ms
+    metrics = jax.tree.map(jnp.mean, metrics)
+    return y.reshape(B, L, D), metrics

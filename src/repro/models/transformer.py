@@ -1,0 +1,417 @@
+"""Layer stacks for every assigned family: decoder, encoder, SSM, hybrid.
+
+One homogeneous *layer body* per family, stacked with ``module.stacked`` and
+iterated with ``lax.scan`` (``cfg.scan_layers``) so the lowered HLO stays one
+layer deep regardless of depth — essential for the 96-layer dry-runs. Remat
+(``cfg.remat``) wraps the scan body.
+
+Families:
+
+  * dense / vlm / moe / encoder — pre-norm attention (GQA/MQA/MLA/SWA) +
+    pre-norm MLP or MoE; encoder runs with ``causal=False`` and no cache.
+  * ssm — pre-norm mamba2 mixer only (mamba2-130m has no MLP sublayer).
+  * hybrid (zamba2) — the layer stack is mamba2 blocks grouped into
+    ``A = num_layers / shared_attn_every`` segments; ONE shared transformer
+    block (single weight set) is applied at the start of every segment. Each
+    application keeps its own KV cache (the activations differ per depth even
+    though weights are shared). The zamba2 trick of concatenating the original
+    embedding into the shared block input is simplified to a plain residual
+    block — noted in DESIGN.md §6.
+
+Decode caches are stacked pytrees scanned alongside the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    KVCache,
+    MLACache,
+    apply_attention,
+    apply_mla,
+    desc_attention,
+    init_kv_cache,
+    init_mla_cache,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, apply_norm, desc_mlp, desc_norm
+from repro.models.mamba2 import SSMState, apply_mamba2, desc_mamba2, init_ssm_state
+from repro.models.moe import apply_moe, desc_moe
+from repro.models.module import NO_SHARDING, ShardingCtx, stacked
+from repro.utils import pytree_dataclass
+
+Tree = Any
+
+ZERO_METRICS = {
+    "aux_loss": jnp.zeros((), jnp.float32),
+    "router_z": jnp.zeros((), jnp.float32),
+    "drop_fraction": jnp.zeros((), jnp.float32),
+}
+
+
+# ---------------------------------------------------------------------------
+# Per-layer descriptors
+# ---------------------------------------------------------------------------
+
+
+def desc_layer(cfg: ModelConfig) -> dict:
+    """Descriptor tree for ONE layer of the homogeneous stack."""
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln": desc_norm(cfg), "mixer": desc_mamba2(cfg)}
+    out = {"ln_attn": desc_norm(cfg), "attn": desc_attention(cfg), "ln_mlp": desc_norm(cfg)}
+    if cfg.num_experts:
+        out["moe"] = desc_moe(cfg)
+    else:
+        out["mlp"] = desc_mlp(cfg)
+    return out
+
+
+def desc_shared_block(cfg: ModelConfig) -> dict:
+    """zamba2's single shared transformer block (attention + MLP)."""
+    return {
+        "ln_attn": desc_norm(cfg),
+        "attn": desc_attention(cfg),
+        "ln_mlp": desc_norm(cfg),
+        "mlp": desc_mlp(cfg),
+    }
+
+
+def desc_stack(cfg: ModelConfig) -> dict:
+    out = {"layers": stacked(desc_layer(cfg), cfg.num_layers)}
+    if cfg.family == "hybrid" and cfg.shared_attn_every > 0:
+        out["shared"] = desc_shared_block(cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _attn_fn(cfg: ModelConfig):
+    return apply_mla if cfg.attention == "mla" else apply_attention
+
+
+def apply_attn_layer(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    cache: Optional[KVCache | MLACache],
+) -> tuple[jax.Array, Optional[KVCache | MLACache], dict]:
+    """Pre-norm attention + MLP/MoE block. Returns (x, cache', moe_metrics)."""
+    h = apply_norm(params["ln_attn"], x, cfg)
+    a, new_cache = _attn_fn(cfg)(params["attn"], h, positions, cfg, ctx, cache)
+    x = ctx.constrain(x + a, ("batch", "seq", "act_embed"))
+    h = apply_norm(params["ln_mlp"], x, cfg)
+    if cfg.num_experts:
+        m, metrics = apply_moe(params["moe"], h, cfg, ctx)
+    else:
+        m, metrics = apply_mlp(params["mlp"], h, cfg, ctx), ZERO_METRICS
+    x = ctx.constrain(x + m, ("batch", "seq", "act_embed"))
+    return x, new_cache, metrics
+
+
+def apply_ssm_layer(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    state: Optional[SSMState],
+    return_state: bool,
+) -> tuple[jax.Array, Optional[SSMState]]:
+    h = apply_norm(params["ln"], x, cfg)
+    y, new_state = apply_mamba2(params["mixer"], h, cfg, ctx, state, return_state)
+    return ctx.constrain(x + y, ("batch", "seq", "act_embed")), new_state
+
+
+def apply_shared_block(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    cache: Optional[KVCache],
+) -> tuple[jax.Array, Optional[KVCache]]:
+    h = apply_norm(params["ln_attn"], x, cfg)
+    a, new_cache = apply_attention(params["attn"], h, positions, cfg, ctx, cache)
+    x = x + a
+    h = apply_norm(params["ln_mlp"], x, cfg)
+    return ctx.constrain(x + apply_mlp(params["mlp"], h, cfg, ctx), ("batch", "seq", "act_embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    # "block": save only the big matmul outputs without batch dims (weight-
+    # stationary intermediates), recompute the rest — the standard LM policy.
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+# ---------------------------------------------------------------------------
+# Attention-family stack
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_stack(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    caches,  # stacked cache pytree or None
+):
+    def body(x, layer):
+        p, cache = layer
+        x, new_cache, metrics = apply_attn_layer(p, x, positions, cfg, ctx, cache)
+        return x, (new_cache, metrics)
+
+    g = cfg.remat_group
+    if (
+        cfg.scan_layers
+        and caches is None
+        and g > 1
+        and cfg.num_layers % g == 0
+    ):
+        # scan-of-scans: checkpoint whole groups of g layers; only L/g
+        # residual carries are saved, the inner g layers recompute in bwd.
+        grouped = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // g, g, *a.shape[1:]), params["layers"]
+        )
+        layer_descs = desc_layer(cfg)
+
+        def pin_group(pg):
+            # storage-spec constraint at the checkpoint boundary: its
+            # TRANSPOSE pins the group's weight-gradient cotangent to the
+            # sharded layout — without it the remat boundary drops the
+            # sharding and the outer scan accumulates FULL-size gradients
+            # (3 x 24 GB for yi-6b, ~260 GB for nemotron). TensorDesc is an
+            # unregistered dataclass, i.e. a natural tree leaf.
+            return jax.tree.map(
+                lambda p, d: ctx.constrain(p, ("layers", *d.axes)), pg, layer_descs
+            )
+
+        def group_body(x, pg):
+            pg = pin_group(pg)
+
+            def inner(xc, p):
+                xc, (_, metrics) = body(xc, (p, None))
+                return xc, metrics
+
+            # nested remat: the group recompute re-runs g layer forwards —
+            # each must itself be checkpointed, else its full linearization
+            # residuals (~9 GB/layer at 4k seq) are all saved at once.
+            x, mets = jax.lax.scan(_remat(inner, cfg), x, pg)
+            return x, jax.tree.map(jnp.mean, mets)
+
+        group_body = _remat(group_body, cfg)
+        x, metrics = jax.lax.scan(group_body, x, grouped)
+        return x, None, jax.tree.map(jnp.mean, metrics)
+
+    body = _remat(body, cfg)
+
+    if cfg.scan_layers:
+        x, (new_caches, metrics) = jax.lax.scan(body, x, (params["layers"], caches))
+        metrics = jax.tree.map(jnp.mean, metrics)
+    else:
+        new_list, mets = [], []
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            c = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            x, nc, m = apply_attn_layer(p, x, positions, cfg, ctx, c)
+            new_list.append(nc)
+            mets.append(m)
+        new_caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if caches is not None else None
+        )
+        metrics = jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs)), *mets)
+    return x, new_caches, metrics
+
+
+# ---------------------------------------------------------------------------
+# SSM stack
+# ---------------------------------------------------------------------------
+
+
+def _apply_ssm_stack(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    states,  # stacked SSMState or None
+    return_state: bool,
+):
+    def body(x, layer):
+        p, st = layer
+        x, new_st = apply_ssm_layer(p, x, cfg, ctx, st, return_state)
+        return x, new_st
+
+    body = _remat(body, cfg)
+
+    if cfg.scan_layers:
+        x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+    else:
+        new_list = []
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            st = jax.tree.map(lambda a: a[i], states) if states is not None else None
+            x, ns = apply_ssm_layer(p, x, cfg, ctx, st, return_state)
+            new_list.append(ns)
+        new_states = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if new_list[0] is not None else None
+        )
+    return x, new_states
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2) stack: segments of [shared attn block + k mamba layers]
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class HybridCache:
+    """Decode state for the hybrid stack: per-layer SSM states stacked
+    [A, k, ...] + per-application shared-attention KV caches stacked [A, ...]."""
+
+    ssm: SSMState
+    attn: KVCache
+
+
+def _segments(cfg: ModelConfig) -> tuple[int, int]:
+    k = cfg.shared_attn_every
+    assert cfg.num_layers % k == 0, "num_layers must divide into shared-attn segments"
+    return cfg.num_layers // k, k
+
+
+def _apply_hybrid_stack(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    caches: Optional[HybridCache],
+    return_state: bool,
+):
+    A, k = _segments(cfg)
+    seg_params = jax.tree.map(lambda a: a.reshape(A, k, *a.shape[1:]), params["layers"])
+    shared = params["shared"]
+
+    def seg_body(x, seg):
+        p_seg, ssm_seg, attn_cache = seg
+        x, new_attn = apply_shared_block(shared, x, positions, cfg, ctx, attn_cache)
+
+        def inner(x, layer):
+            p, st = layer
+            x, ns = apply_ssm_layer(p, x, cfg, ctx, st, return_state)
+            return x, ns
+
+        # nested remat (same reason as the grouped attention stack): the
+        # checkpointed segment recompute must not save every inner layer's
+        # linearization residuals at once
+        x, new_ssm = jax.lax.scan(_remat(inner, cfg), x, (p_seg, ssm_seg))
+        return x, (new_ssm, new_attn)
+
+    seg_body = _remat(seg_body, cfg)
+
+    ssm_in = caches.ssm if caches is not None else None
+    attn_in = caches.attn if caches is not None else None
+    if cfg.scan_layers:
+        x, (new_ssm, new_attn) = jax.lax.scan(seg_body, x, (seg_params, ssm_in, attn_in))
+    else:
+        ssm_list, attn_list = [], []
+        for a in range(A):
+            p = jax.tree.map(lambda t: t[a], seg_params)
+            ssm_a = jax.tree.map(lambda t: t[a], ssm_in) if ssm_in is not None else None
+            att_a = jax.tree.map(lambda t: t[a], attn_in) if attn_in is not None else None
+            x, (ns, na) = seg_body(x, (p, ssm_a, att_a))
+            ssm_list.append(ns)
+            attn_list.append(na)
+        new_ssm = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_list) if ssm_list[0] is not None else None
+        )
+        new_attn = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *attn_list) if attn_list[0] is not None else None
+        )
+
+    new_caches = None
+    if new_ssm is not None and new_attn is not None:
+        new_caches = HybridCache(ssm=new_ssm, attn=new_attn)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Public stack API
+# ---------------------------------------------------------------------------
+
+
+def apply_stack(
+    params: dict,
+    x: jax.Array,  # [B, L, D] embedded inputs
+    positions: jax.Array,  # [L] int32
+    cfg: ModelConfig,
+    ctx: ShardingCtx = NO_SHARDING,
+    caches: Optional[Tree] = None,
+    return_state: bool = False,
+) -> tuple[jax.Array, Optional[Tree], dict]:
+    """Run the full layer stack. Returns (hidden, caches', metrics).
+
+    ``caches`` semantics: None = stateless forward (training / encoder);
+    a stacked cache pytree = prefill (L>1) or decode (L=1) step.
+    For SSM/hybrid training, ``return_state=True`` builds the decode state
+    from the parallel form (prefill path).
+    """
+    if cfg.family == "ssm":
+        want_state = caches is not None or return_state
+        x, new_states = _apply_ssm_stack(params, x, cfg, ctx, caches, want_state)
+        return x, new_states, dict(ZERO_METRICS)
+    if cfg.family == "hybrid":
+        want_state = caches is not None or return_state
+        x, new_caches = _apply_hybrid_stack(params, x, positions, cfg, ctx, caches, want_state)
+        return x, new_caches, dict(ZERO_METRICS)
+    x, new_caches, metrics = _apply_attn_stack(params, x, positions, cfg, ctx, caches)
+    return x, new_caches, metrics
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (stacked over layers / segments)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Optional[Tree]:
+    """Zero-initialized stacked decode caches for the whole stack."""
+    if cfg.is_encoder:
+        return None
+
+    def rep(make, n):
+        one = make()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)).copy(), one)
+
+    if cfg.family == "ssm":
+        return rep(lambda: init_ssm_state(cfg, batch), cfg.num_layers)
+    if cfg.family == "hybrid":
+        A, k = _segments(cfg)
+        ssm = rep(lambda: rep(lambda: init_ssm_state(cfg, batch), k), A)
+        attn = rep(lambda: init_kv_cache(cfg, batch, max_len), A)
+        return HybridCache(ssm=ssm, attn=attn)
+    if cfg.attention == "mla":
+        return rep(lambda: init_mla_cache(cfg, batch, max_len), cfg.num_layers)
+    return rep(lambda: init_kv_cache(cfg, batch, max_len), cfg.num_layers)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int) -> Optional[Tree]:
+    """ShapeDtypeStruct cache tree for the dry-run (no allocation)."""
+    if cfg.is_encoder:
+        return None
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))

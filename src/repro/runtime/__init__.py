@@ -1,0 +1,3 @@
+from repro.runtime.elastic import ElasticRunner, FailureInjector
+
+__all__ = ["ElasticRunner", "FailureInjector"]

@@ -1,0 +1,146 @@
+"""Elastic training runtime: failure injection, mesh shrink/grow, restore.
+
+At 1000+ node scale the failure model is "some pod is always down". The
+runtime mechanism demonstrated here (and exercised in
+tests/test_elastic.py on CPU host devices):
+
+  1. a ``FailureInjector`` raises :class:`NodeFailure` at configured steps
+     (standing in for the cluster health-checker);
+  2. the :class:`ElasticRunner` catches it, rebuilds the mesh over the
+     surviving device set (any count — sharding specs are resolved against
+     the *new* mesh, with non-divisible dims falling back per module.py),
+  3. restores the last committed checkpoint directly onto the new mesh
+     (checkpoint.py's elastic read path), and
+  4. re-jits the step function and continues from the restored step.
+
+Straggler mitigation: SPMD has no per-device work queues, so the paper's
+work-stealing maps to (a) static cost-model balancing (core/balance.py,
+applied per-shard before compile) and (b) the ``StepTimer`` watchdog that
+flags slow steps so the orchestration layer can evict a slow host between
+checkpoints — the standard TPU-fleet remediation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.utils import logger
+
+Tree = Any
+
+
+class NodeFailure(RuntimeError):
+    """Simulated loss of one or more devices/hosts."""
+
+    def __init__(self, lost_devices: int):
+        super().__init__(f"lost {lost_devices} devices")
+        self.lost_devices = lost_devices
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure schedule: {step: devices_lost}."""
+
+    schedule: dict[int, int]
+
+    def check(self, step: int) -> None:
+        if step in self.schedule:
+            lost = self.schedule.pop(step)
+            raise NodeFailure(lost)
+
+
+class StepTimer:
+    """Rolling step-time stats; flags stragglers (> threshold x median)."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.0):
+        self.times: list[float] = []
+        self.window = window
+        self.threshold = threshold
+        self.straggler_steps: list[int] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        self.times.append(seconds)
+        self.times = self.times[-self.window :]
+        med = float(np.median(self.times))
+        slow = len(self.times) >= 5 and seconds > self.threshold * med
+        if slow:
+            self.straggler_steps.append(step)
+            logger.warning("step %d straggled: %.3fs vs median %.3fs", step, seconds, med)
+        return slow
+
+
+@dataclasses.dataclass
+class ElasticRunner:
+    """Drives a train loop that survives device loss.
+
+    ``make_mesh(devices)``      — build a mesh over the surviving devices.
+    ``make_step(mesh)``         — (re)build the jitted step for a mesh.
+    ``make_state(mesh, target)``— init or restore state on a mesh; receives
+                                  the abstract target (ShapeDtypeStructs).
+    ``make_batch(step, mesh)``  — produce the (host) batch for a step.
+    """
+
+    make_mesh: Callable[[Sequence[jax.Device]], Mesh]
+    make_step: Callable[[Mesh], Callable]
+    abstract_state: Tree
+    shardings_for: Callable[[Mesh], Tree]
+    make_batch: Callable[[int, Mesh], Any]
+    init_state: Callable[[Mesh], Tree]
+    manager: CheckpointManager
+    checkpoint_every: int = 10
+    injector: Optional[FailureInjector] = None
+    timer: StepTimer = dataclasses.field(default_factory=StepTimer)
+
+    def run(self, num_steps: int, devices: Optional[list] = None) -> tuple[Tree, dict]:
+        devices = list(devices if devices is not None else jax.devices())
+        mesh = self.make_mesh(devices)
+        step_fn = self.make_step(mesh)
+
+        start = self.manager.latest()
+        if start is None:
+            state = self.init_state(mesh)
+            start = 0
+        else:
+            state = self.manager.restore(
+                self.abstract_state, mesh=mesh, shardings=self.shardings_for(mesh)
+            )
+        events: list[str] = []
+
+        step = start
+        while step < num_steps:
+            try:
+                if self.injector is not None:
+                    self.injector.check(step)
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, self.make_batch(step, mesh))
+                jax.block_until_ready(metrics)
+                self.timer.record(step, time.perf_counter() - t0)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self.manager.save(step, state)
+            except NodeFailure as e:
+                events.append(f"step {step}: {e}")
+                logger.warning("failure at step %d: %s — shrinking mesh", step, e)
+                devices = devices[: max(1, len(devices) - e.lost_devices)]
+                mesh = self.make_mesh(devices)
+                step_fn = self.make_step(mesh)
+                restored = self.manager.latest()
+                if restored is None:
+                    state = self.init_state(mesh)
+                    step = 0
+                else:
+                    state = self.manager.restore(
+                        self.abstract_state, mesh=mesh, shardings=self.shardings_for(mesh)
+                    )
+                    step = restored
+                logger.info("resumed at step %d on %d devices", step, len(devices))
+
+        self.manager.save(num_steps, state)
+        self.manager.wait()
+        return state, {"events": events, "straggler_steps": self.timer.straggler_steps}

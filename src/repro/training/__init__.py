@@ -1,0 +1,17 @@
+from repro.training.losses import lm_loss, total_loss
+from repro.training.optimizer import AdamW, OptState, warmup_cosine
+from repro.training.train import TrainState, make_train_step, init_train_state
+from repro.training.serve import make_prefill_step, make_decode_step
+
+__all__ = [
+    "lm_loss",
+    "total_loss",
+    "AdamW",
+    "OptState",
+    "warmup_cosine",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "make_prefill_step",
+    "make_decode_step",
+]

@@ -1,0 +1,103 @@
+"""Losses: LM cross-entropy (+ z-loss), masked prediction, MoE auxiliaries.
+
+Logits arrive fp32 (lm_head casts); the softmax cross-entropy is computed
+with the max-subtracted logsumexp so bf16 activations upstream cannot
+overflow it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _loss_sums(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> dict:
+    """Masked sums (not means) so chunks combine exactly."""
+    lse = jax.nn.logsumexp(logits, axis=-1)  # [B, L]
+    picked = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    return {
+        "xent": jnp.sum((lse - picked) * m),
+        "z": jnp.sum(jnp.square(lse) * m),
+        "correct": jnp.sum((jnp.argmax(logits, -1) == labels) * m),
+        "tokens": jnp.sum(m),
+    }
+
+
+def _finalize(sums: dict, z_weight: float) -> tuple[jax.Array, dict]:
+    denom = jnp.maximum(sums["tokens"], 1.0)
+    ce = sums["xent"] / denom
+    z = sums["z"] / denom
+    loss = ce + z_weight * z
+    return loss, {"ce": ce, "z_loss": z, "accuracy": sums["correct"] / denom, "tokens": sums["tokens"]}
+
+
+def lm_loss(
+    logits: jax.Array,  # [B, L, V] fp32
+    labels: jax.Array,  # [B, L] int32
+    mask: jax.Array,  # [B, L] {0,1} — 1 = contributes to the loss
+    z_weight: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    """Mean masked token cross-entropy + z-loss. Returns (loss, metrics)."""
+    return _finalize(_loss_sums(logits, labels, mask), z_weight)
+
+
+def chunked_lm_loss(
+    head_fn,  # hidden [B, Lc, D] -> logits [B, Lc, V] (fp32)
+    hidden: jax.Array,  # [B, L, D] final-norm'd backbone output
+    labels: jax.Array,
+    mask: jax.Array,
+    chunk: int = 512,
+    z_weight: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    """Cross-entropy with the vocabulary head applied per sequence chunk.
+
+    The full [B, L, V] logits tensor is never materialized — at
+    vocab=256k / 1M tokens it would be terabytes. ``lax.scan`` over L/chunk
+    blocks keeps one [B, chunk, V] block live; the backward pass recomputes
+    each block's logits (the head weights are reused, so this costs one
+    extra head matmul — the standard memory/compute trade for big vocabs).
+    """
+    B, L, D = hidden.shape
+    if L <= chunk or L % chunk != 0:
+        return lm_loss(head_fn(hidden), labels, mask, z_weight)
+    n = L // chunk
+    hb = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    mb = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, blk):
+        # checkpointed: the [B, chunk, V] logits block is recomputed in the
+        # backward pass instead of being saved per scan step (8 x 1.6 GB for
+        # a 50k vocab — the whole point of chunking).
+        h, l, m = blk
+        s = _loss_sums(head_fn(h), l, m)
+        return jax.tree.map(jnp.add, acc, s), None
+
+    zero = {k: jnp.zeros((), jnp.float32) for k in ("xent", "z", "correct", "tokens")}
+    sums, _ = jax.lax.scan(body, zero, (hb, lb, mb))
+    return _finalize(sums, z_weight)
+
+
+def total_loss(
+    cfg: ModelConfig,
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    moe_metrics: dict,
+    z_weight: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    """Task loss + MoE auxiliaries (over materialized logits — small-vocab /
+    test path; the train_step uses the chunked head). The encoder (hubert)
+    masked-prediction objective is the same xent restricted to corrupted
+    positions — the data pipeline supplies that mask."""
+    loss, metrics = lm_loss(logits, labels, mask, z_weight)
+    if cfg.num_experts:
+        aux = cfg.router_aux_weight * moe_metrics["aux_loss"]
+        zr = 1e-3 * moe_metrics["router_z"]
+        loss = loss + aux + zr
+        metrics = {**metrics, **moe_metrics}
+    metrics["loss"] = loss
+    return loss, metrics

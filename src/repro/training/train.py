@@ -1,0 +1,158 @@
+"""train_step factory: loss + grad + optimizer under explicit sharding.
+
+The factory returns a pure ``(state, batch, key?) -> (state, metrics)``
+function plus the in/out shardings needed to jit it on a mesh — the same
+artifact the launcher jits for real steps and the dry-run lowers abstractly.
+
+Microbatch gradient accumulation runs as a ``lax.scan`` over a reshaped
+batch: [B, ...] -> [n_mb, B/n_mb, ...], grads accumulated in fp32. With
+``n_mb == 1`` the scan disappears (no overhead path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import LMModel
+from repro.models.module import TRAIN_RULES, ShardingCtx, ShardingRules, resolve_spec
+from repro.training.losses import chunked_lm_loss, total_loss
+from repro.training.optimizer import AdamW, OptState
+from repro.utils import pytree_dataclass
+
+Tree = Any
+
+
+@pytree_dataclass
+class TrainState:
+    params: Tree
+    opt: OptState
+    step: jax.Array  # [] int32
+
+
+def init_train_state(key: jax.Array, model: LMModel, optimizer: AdamW) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(model: LMModel, optimizer: AdamW) -> TrainState:
+    """ShapeDtypeStruct state for the dry-run."""
+    return jax.eval_shape(lambda k: init_train_state(k, model, optimizer), jax.random.key(0))
+
+
+def batch_specs(cfg: ModelConfig, rules: ShardingRules, mesh: Mesh, batch: int, seq: int) -> dict:
+    """PartitionSpecs for one training batch dict."""
+    if cfg.input_mode == "tokens":
+        inp = resolve_spec((batch, seq), ("batch", "seq"), rules, mesh)
+    else:
+        inp = resolve_spec((batch, seq, cfg.frame_dim), ("batch", "seq", None), rules, mesh)
+    tok = resolve_spec((batch, seq), ("batch", "seq"), rules, mesh)
+    return {"inputs": inp, "labels": tok, "mask": tok}
+
+
+def abstract_batch(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct batch for the dry-run / compile."""
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((batch, seq, cfg.frame_dim), jnp.bfloat16)
+    ids = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return {"inputs": inputs, "labels": ids, "mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32)}
+
+
+def state_specs(model: LMModel, optimizer: AdamW, rules: ShardingRules, mesh: Mesh) -> TrainState:
+    p = model.specs(rules, mesh)
+    return TrainState(params=p, opt=optimizer.state_specs(p), step=P())
+
+
+def make_train_step(
+    model: LMModel,
+    optimizer: AdamW,
+    rules: ShardingRules = TRAIN_RULES,
+    mesh: Optional[Mesh] = None,
+    microbatches: int = 1,
+    z_weight: float = 1e-4,
+    loss_chunk: int = 512,
+):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure)."""
+    cfg = model.cfg
+    ctx = ShardingCtx(mesh=mesh, rules=rules) if mesh is not None else ShardingCtx()
+
+    def loss_fn(params: Tree, batch: dict) -> tuple[jax.Array, dict]:
+        hidden, moe_metrics = model.hidden(params, batch["inputs"], ctx=ctx)
+        loss, metrics = chunked_lm_loss(
+            lambda h: model.logits(
+                params, ctx.constrain(h, ("loss_batch", "seq", "act_embed")), ctx
+            ),
+            hidden,
+            batch["labels"],
+            batch["mask"],
+            chunk=loss_chunk,
+            z_weight=z_weight,
+        )
+        if cfg.num_experts:
+            loss = loss + cfg.router_aux_weight * moe_metrics["aux_loss"]
+            loss = loss + 1e-3 * moe_metrics["router_z"]
+            metrics = {**metrics, **moe_metrics}
+        metrics["loss"] = loss
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accum_grads(params: Tree, batch: dict) -> tuple[Tree, dict]:
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        mb = jax.tree.map(
+            lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]), batch
+        )
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, one):
+            (_, metrics), grads = grad_fn(params, one)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, metrics
+
+        grads, metrics = jax.lax.scan(body, zero, mb)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        metrics = jax.tree.map(jnp.mean, metrics)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        grads, metrics = accum_grads(state.params, batch)
+        params, opt, opt_metrics = optimizer.update(grads, state.opt, state.params)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        return new_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def jit_train_step(
+    model: LMModel,
+    optimizer: AdamW,
+    mesh: Mesh,
+    rules: ShardingRules = TRAIN_RULES,
+    microbatches: int = 1,
+    batch: int = 8,
+    seq: int = 512,
+    donate: bool = True,
+):
+    """jit the factory output with explicit in/out shardings on ``mesh``."""
+    step_fn = make_train_step(model, optimizer, rules, mesh, microbatches)
+    sspec = state_specs(model, optimizer, rules, mesh)
+    bspec = batch_specs(model.cfg, rules, mesh, batch, seq)
+    to_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    return jax.jit(
+        step_fn,
+        in_shardings=(to_sharding(sspec), to_sharding(bspec)),
+        out_shardings=(to_sharding(sspec), None),
+        donate_argnums=(0,) if donate else (),
+    )

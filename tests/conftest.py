@@ -1,0 +1,38 @@
+"""Shared pytest config + helpers for multi-device subprocess tests."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end test")
+    config.addinivalue_line("markers", "multidevice: runs a subprocess with forced host devices")
+
+
+def run_with_devices(code: str, num_devices: int, timeout: int = 600) -> str:
+    """Run ``code`` in a fresh python with N forced host devices.
+
+    The main test process keeps its single CPU device (jax locks the device
+    count at first backend init), so anything multi-device runs out of
+    process. Raises on non-zero exit; returns stdout.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={num_devices}"
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+        )
+    return proc.stdout

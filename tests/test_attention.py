@@ -1,0 +1,135 @@
+"""Attention unit + property tests: flash vs dense oracle, masks, caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    _attend_dense,
+    _attend_flash,
+    attention_mask,
+    rolling_slot_positions,
+)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lq=st.integers(1, 33),
+    s_extra=st.integers(0, 20),
+    kv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 7, 16]),
+    qc=st.sampled_from([4, 8, 64]),
+    kc=st.sampled_from([4, 16, 64]),
+)
+def test_flash_matches_dense_property(lq, s_extra, kv, g, causal, window, qc, kc):
+    """Property: the chunked two-level-scan attention equals the dense oracle
+    for every (shape, mask, chunking) combination."""
+    key = jax.random.key(lq * 1000 + s_extra * 31 + kv * 7 + g)
+    B, H, dh = 2, kv * g, 8
+    S = lq + s_extra
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], B, lq, H, dh)
+    k = _rand(ks[1], B, S, kv, dh)
+    v = _rand(ks[2], B, S, kv, dh)
+    q_pos = jnp.arange(s_extra, S, dtype=jnp.int32)
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+
+    mask = attention_mask(q_pos, kv_pos, causal, window)
+    # guard: fully-masked rows are defined as 0 output in both paths
+    ref = _attend_dense(q, k, v, mask, 0.3)
+    out = _attend_flash(q, k, v, q_pos, kv_pos, causal, window, 0.3, qc, kc)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=3e-5, rtol=3e-5)
+
+
+def test_mask_semantics():
+    q_pos = jnp.asarray([3, 4], jnp.int32)
+    kv_pos = jnp.asarray([0, 1, 2, 3, 4, -1], jnp.int32)
+    m = attention_mask(q_pos, kv_pos, causal=True, window=None)
+    assert m.tolist() == [
+        [True, True, True, True, False, False],
+        [True, True, True, True, True, False],
+    ]
+    mw = attention_mask(q_pos, kv_pos, causal=True, window=2)
+    assert mw.tolist() == [
+        [False, False, True, True, False, False],
+        [False, False, False, True, True, False],
+    ]
+
+
+def test_rolling_slot_positions():
+    # window 4, next_pos 6: slots hold positions [4, 5, 2, 3]
+    pos = rolling_slot_positions(jnp.asarray(6, jnp.int32), 4)
+    assert pos.tolist() == [4, 5, 2, 3]
+    # empty cache
+    pos0 = rolling_slot_positions(jnp.asarray(0, jnp.int32), 4)
+    assert pos0.tolist() == [-1, -1, -1, -1]
+    # exactly full
+    pos4 = rolling_slot_positions(jnp.asarray(4, jnp.int32), 4)
+    assert pos4.tolist() == [0, 1, 2, 3]
+
+
+def test_rolling_cache_decode_matches_full_attention():
+    """SWA decode with a rolling W-slot cache == attention over the last W
+    tokens of an unbounded cache."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    cfg = (
+        get_config("mixtral-8x22b")
+        .reduced()
+        .replace(activation_dtype="float32", num_experts=0, mlp="swiglu")
+    )
+    W = cfg.sliding_window
+    assert W is not None and W == 64
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    T = 100  # > window so the ring buffer wraps
+    tokens = jax.random.randint(jax.random.key(1), (1, T), 0, cfg.vocab_size)
+
+    full, _ = jax.jit(model.forward)(params, tokens)  # oracle (mask handles SWA)
+
+    cache = model.init_cache(1, T)
+    Lp = 8
+    lg, cache = jax.jit(model.prefill)(params, tokens[:, :Lp], cache)
+    decode = jax.jit(model.decode)
+    outs = [lg[:, -1]]
+    for t in range(Lp, T):
+        lg, cache = decode(params, tokens[:, t : t + 1], cache, jnp.asarray([t], jnp.int32))
+        outs.append(lg[:, -1])
+    stepwise = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(stepwise[:, :-1]),
+        np.asarray(full[:, Lp - 1 : -1]),
+        atol=2e-3,
+        rtol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("q_lora", [0, 64])
+def test_mla_flash_paths_match_dense(q_lora):
+    from repro.configs import get_config
+    from repro.models.attention import apply_mla, desc_attention
+    from repro.models.module import init_params
+
+    cfg = (
+        get_config("minicpm3-4b")
+        .reduced()
+        .replace(activation_dtype="float32", q_lora_rank=q_lora)
+    )
+    params = init_params(jax.random.key(0), desc_attention(cfg))
+    B, L = 2, 48
+    x = _rand(jax.random.key(1), B, L, cfg.d_model)
+    pos = jnp.arange(L, dtype=jnp.int32)
+
+    dense, _ = apply_mla(params, x, pos, cfg)  # L=48 < chunks: dense
+    flash, _ = apply_mla(params, x, pos, cfg.replace(attn_q_chunk=8, attn_kv_chunk=16))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(flash), atol=5e-5, rtol=5e-5)

@@ -1,0 +1,214 @@
+"""Unit + property tests for the single-device BPMF core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BPMFConfig, run
+from repro.core import posterior
+from repro.core.hyper import hyper_sufficient_stats, sample_hyper, sample_hyper_from_stats
+from repro.core.types import Bucket, HyperParams, NormalWishartPrior
+from repro.data.sparse import RatingsCOO, bucketize_side, build_bpmf_data, csr_from_coo
+from repro.data.synthetic import small_test_ratings
+
+
+# ---------- sparse / bucketing ----------
+
+
+@given(
+    num_items=st.integers(3, 40),
+    num_opp=st.integers(3, 40),
+    nnz=st.integers(0, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_bucketize_roundtrip(num_items, num_opp, nnz, seed):
+    """Every (item, nbr, val) triple survives bucketing exactly once."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, num_items, nnz).astype(np.int32)
+    cols = rng.integers(0, num_opp, nnz).astype(np.int32)
+    # dedupe pairs
+    keys, idx = np.unique(rows.astype(np.int64) * num_opp + cols, return_index=True)
+    rows, cols = rows[idx], cols[idx]
+    vals = rng.normal(size=len(rows)).astype(np.float32)
+
+    indptr, indices, values = csr_from_coo(rows, cols, vals, num_items)
+    side = bucketize_side(indptr, indices, values, pads=(4, 16, 64))
+
+    got = set()
+    for b in side.buckets:
+        ids = np.asarray(b.item_ids)
+        nbr = np.asarray(b.nbr)
+        val = np.asarray(b.val)
+        nz = np.asarray(b.nnz)
+        for r in range(len(ids)):
+            for p in range(nz[r]):
+                got.add((int(ids[r]), int(nbr[r, p]), float(val[r, p])))
+        # padding must be zeroed
+        mask = np.arange(b.P)[None, :] >= nz[:, None]
+        assert np.all(val[mask] == 0.0)
+    want = {(int(r), int(c), float(v)) for r, c, v in zip(rows, cols, vals)}
+    assert got == want
+    # every item appears exactly once across buckets
+    all_ids = np.concatenate([np.asarray(b.item_ids) for b in side.buckets])
+    assert sorted(all_ids.tolist()) == list(range(num_items))
+
+
+def test_csr_sorted_and_complete():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 10, 100).astype(np.int32)
+    cols = rng.integers(0, 15, 100).astype(np.int32)
+    vals = rng.normal(size=100).astype(np.float32)
+    indptr, indices, values = csr_from_coo(rows, cols, vals, 10)
+    assert indptr[-1] == 100
+    for i in range(10):
+        assert np.all(np.diff(indices[indptr[i]:indptr[i + 1]]) >= 0) or (indptr[i + 1] - indptr[i]) <= 1
+
+
+# ---------- hyper sampling ----------
+
+
+def test_normal_wishart_moments():
+    """E[Lambda] = nu* W*, E[mu] = mu* — check by Monte Carlo."""
+    K = 4
+    rng_key = jax.random.key(0)
+    X = jax.random.normal(jax.random.key(1), (500, K)) * 2.0 + 1.0
+    prior = NormalWishartPrior.default(K)
+
+    keys = jax.random.split(rng_key, 3000)
+    hypers = jax.vmap(lambda k: sample_hyper(k, X, prior))(keys)
+
+    n, sx, sxx = hyper_sufficient_stats(X)
+    xbar = sx / n
+    S = sxx / n - jnp.outer(xbar, xbar)
+    beta_star = prior.beta0 + n
+    nu_star = prior.nu0 + n
+    mu_star = (prior.beta0 * prior.mu0 + n * xbar) / beta_star
+    dm = prior.mu0 - xbar
+    Wstar_inv = jnp.linalg.inv(prior.W0) + n * S + (prior.beta0 * n / beta_star) * jnp.outer(dm, dm)
+    Wstar = jnp.linalg.inv(Wstar_inv)
+
+    mean_Lam = jnp.mean(hypers.Lam, axis=0)
+    expect_Lam = nu_star * Wstar
+    np.testing.assert_allclose(np.asarray(mean_Lam), np.asarray(expect_Lam), rtol=0.15)
+    np.testing.assert_allclose(np.asarray(jnp.mean(hypers.mu, axis=0)), np.asarray(mu_star), atol=0.05)
+
+
+def test_hyper_weighted_matches_unweighted():
+    """Padding rows with weight 0 must not change the sufficient stats."""
+    K = 5
+    X = jax.random.normal(jax.random.key(2), (40, K))
+    Xpad = jnp.concatenate([X, 99.0 * jnp.ones((7, K))])
+    w = jnp.concatenate([jnp.ones(40), jnp.zeros(7)])
+    n0, sx0, sxx0 = hyper_sufficient_stats(X)
+    n1, sx1, sxx1 = hyper_sufficient_stats(Xpad, w)
+    np.testing.assert_allclose(float(n0), float(n1))
+    np.testing.assert_allclose(np.asarray(sx0), np.asarray(sx1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sxx0), np.asarray(sxx1), rtol=1e-5)
+    prior = NormalWishartPrior.default(K)
+    h0 = sample_hyper_from_stats(jax.random.key(3), n0, sx0, sxx0, prior)
+    h1 = sample_hyper_from_stats(jax.random.key(3), n1, sx1, sxx1, prior)
+    np.testing.assert_allclose(np.asarray(h0.Lam), np.asarray(h1.Lam), rtol=1e-4, atol=1e-5)
+
+
+# ---------- posterior updates ----------
+
+
+@given(
+    B=st.integers(1, 8),
+    P=st.sampled_from([4, 16, 64]),
+    K=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_bucket_update_matches_naive(B, P, K, seed):
+    """Bucketed (padded, batched) update == textbook per-item update."""
+    rng = np.random.default_rng(seed)
+    n_opp = max(30, P)
+    X_opp = jnp.asarray(rng.normal(size=(n_opp, K)), jnp.float32)
+    nnz = rng.integers(0, P + 1, B).astype(np.int32)
+    nbr = np.zeros((B, P), np.int32)
+    val = np.zeros((B, P), np.float32)
+    for i in range(B):
+        nbr[i, : nnz[i]] = rng.choice(n_opp, nnz[i], replace=False)
+        val[i, : nnz[i]] = rng.normal(size=nnz[i])
+    item_ids = rng.choice(100, B, replace=False).astype(np.int32)
+    bucket = Bucket(jnp.asarray(item_ids), jnp.asarray(nbr), jnp.asarray(val), jnp.asarray(nnz))
+    hyper = HyperParams(
+        mu=jnp.asarray(rng.normal(size=K), jnp.float32),
+        Lam=jnp.eye(K) * 2.0,
+    )
+    key = jax.random.key(7)
+    G, g = posterior.gram_terms(X_opp, bucket, alpha=1.7)
+    new = posterior.sample_from_terms(key, bucket.item_ids, G, g, hyper)
+    for i in range(B):
+        ref = posterior.update_item_naive(
+            key, int(item_ids[i]), jnp.asarray(nbr[i, : nnz[i]]),
+            jnp.asarray(val[i, : nnz[i]]), X_opp, hyper, alpha=1.7,
+        )
+        np.testing.assert_allclose(np.asarray(new[i]), np.asarray(ref), rtol=2e-3, atol=2e-4)
+
+
+def test_item_noise_layout_independent():
+    """Noise depends on the global item id only, not batch position."""
+    key = jax.random.key(0)
+    ids_a = jnp.asarray([5, 9, 2], jnp.int32)
+    ids_b = jnp.asarray([9, 2, 5, 7], jnp.int32)
+    za = posterior.item_noise(key, ids_a, 6)
+    zb = posterior.item_noise(key, ids_b, 6)
+    np.testing.assert_allclose(np.asarray(za[1]), np.asarray(zb[0]))
+    np.testing.assert_allclose(np.asarray(za[2]), np.asarray(zb[1]))
+    np.testing.assert_allclose(np.asarray(za[0]), np.asarray(zb[2]))
+
+
+def test_zero_rating_item_samples_from_prior_conditional():
+    K = 4
+    bucket = Bucket(
+        item_ids=jnp.asarray([0], jnp.int32),
+        nbr=jnp.zeros((1, 8), jnp.int32),
+        val=jnp.zeros((1, 8), jnp.float32),
+        nnz=jnp.zeros((1,), jnp.int32),
+    )
+    X_opp = jnp.ones((5, K))
+    hyper = HyperParams(mu=jnp.full((K,), 3.0), Lam=jnp.eye(K) * 1e6)
+    G, g = posterior.gram_terms(X_opp, bucket, alpha=2.0)
+    new = posterior.sample_from_terms(jax.random.key(0), bucket.item_ids, G, g, hyper)
+    # precision huge -> sample ~= prior mean
+    np.testing.assert_allclose(np.asarray(new[0]), 3.0 * np.ones(K), atol=0.05)
+
+
+# ---------- end-to-end convergence ----------
+
+
+@pytest.mark.slow
+def test_gibbs_converges_to_noise_floor():
+    coo, truth = small_test_ratings(num_users=200, num_movies=120, nnz=8000)
+    data = build_bpmf_data(coo, pads=(8, 32, 128), test_fraction=0.1, seed=0)
+    cfg = BPMFConfig(K=8, num_sweeps=50, burn_in=10)
+    _, _, hist = run(jax.random.key(0), data, cfg)
+    final = hist[-1].rmse_avg
+    assert final < 1.5 * truth["noise_std"], f"rmse {final} vs floor {truth['noise_std']}"
+    # RMSE must improve over the first sweep substantially
+    assert final < 0.6 * hist[0].rmse_sample
+
+
+def test_gibbs_deterministic():
+    coo, _ = small_test_ratings(num_users=60, num_movies=40, nnz=1200)
+    data = build_bpmf_data(coo, pads=(8, 32), test_fraction=0.1, seed=0)
+    cfg = BPMFConfig(K=4, num_sweeps=3, burn_in=1)
+    _, _, h1 = run(jax.random.key(0), data, cfg)
+    _, _, h2 = run(jax.random.key(0), data, cfg)
+    assert [m.rmse_sample for m in h1] == [m.rmse_sample for m in h2]
+
+
+def test_predictions_clipped_to_rating_range():
+    coo, _ = small_test_ratings(num_users=60, num_movies=40, nnz=1200)
+    data = build_bpmf_data(coo, pads=(8, 32), test_fraction=0.2, seed=0)
+    from repro.core.prediction import predict
+
+    U = 100.0 * jnp.ones((60, 4))
+    V = jnp.ones((40, 4))
+    preds = predict(U, V, data.test, data.mean_rating, data.min_rating, data.max_rating)
+    assert float(jnp.max(preds)) <= data.max_rating + 1e-6

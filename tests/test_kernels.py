@@ -1,0 +1,105 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bpmf_gram import bpmf_gram_pallas
+
+
+def _case(rng, Ns, K, B, P):
+    X = jnp.asarray(rng.normal(size=(Ns, K)), jnp.float32)
+    nnz = jnp.asarray(rng.integers(0, P + 1, B), jnp.int32)
+    nbr = jnp.asarray(rng.integers(0, Ns, (B, P)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(B, P)), jnp.float32)
+    mask = np.arange(P)[None] < np.asarray(nnz)[:, None]
+    val = jnp.where(mask, val, 0.0)
+    return X, nbr, val, nnz
+
+
+SHAPES = [
+    # (Ns, K, B, P) — sweep neighbor counts, shard sizes, item counts
+    (16, 8, 1, 8),
+    (64, 32, 13, 70),
+    (128, 32, 8, 128),
+    (100, 16, 5, 300),
+    (256, 64, 4, 512),
+    (32, 128, 3, 17),
+    (300, 32, 2, 1024),
+]
+
+
+@pytest.mark.parametrize("Ns,K,B,P", SHAPES)
+def test_gram_kernel_matches_ref_shapes(Ns, K, B, P):
+    rng = np.random.default_rng(Ns * 1000 + K * 100 + B * 10 + P)
+    X, nbr, val, nnz = _case(rng, Ns, K, B, P)
+    G0, g0 = ref.bpmf_gram_ref(X, nbr, val, nnz)
+    G1, g1 = ops.bpmf_gram(X, nbr, val, nnz, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(G0), np.asarray(G1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("compute_dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel_dtypes(compute_dtype):
+    rng = np.random.default_rng(7)
+    X, nbr, val, nnz = _case(rng, 64, 32, 9, 96)
+    G0, g0 = ref.bpmf_gram_ref(X, nbr, val, nnz, compute_dtype=compute_dtype)
+    G1, g1 = ops.bpmf_gram(X, nbr, val, nnz, compute_dtype=compute_dtype, force_pallas=True)
+    tol = 1e-5 if compute_dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(G0), np.asarray(G1), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("tb,pc", [(1, 128), (2, 128), (4, 256), (8, 512)])
+def test_gram_kernel_tilings(tb, pc):
+    """Different (TB, PC) tilings must be bit-identical math in f32."""
+    rng = np.random.default_rng(tb * 31 + pc)
+    B = tb * 3
+    P = pc * 2
+    X, nbr, val, nnz = _case(rng, 80, 32, B, P)
+    G0, g0 = ref.bpmf_gram_ref(X, nbr, val, nnz)
+    G1, g1 = bpmf_gram_pallas(X, nbr, val, nnz, tb=tb, pc=pc, interpret=True)
+    # fp32 accumulation order differs between chunkings -> 1e-4 tolerance
+    np.testing.assert_allclose(np.asarray(G0), np.asarray(G1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    Ns=st.integers(4, 80),
+    K=st.sampled_from([4, 16, 32]),
+    B=st.integers(1, 12),
+    P=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_gram_kernel_property(Ns, K, B, P, seed):
+    """Property sweep: arbitrary raggedness, duplicate neighbors, empty items."""
+    rng = np.random.default_rng(seed)
+    X, nbr, val, nnz = _case(rng, Ns, K, B, P)
+    G0, g0 = ref.bpmf_gram_ref(X, nbr, val, nnz)
+    G1, g1 = ops.bpmf_gram(X, nbr, val, nnz, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(G0), np.asarray(G1), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=2e-5, atol=2e-5)
+
+
+def test_gram_kernel_G_is_psd_and_symmetric():
+    rng = np.random.default_rng(3)
+    X, nbr, val, nnz = _case(rng, 50, 16, 6, 64)
+    G, _ = ops.bpmf_gram(X, nbr, val, nnz, force_pallas=True)
+    Gn = np.asarray(G)
+    np.testing.assert_allclose(Gn, np.swapaxes(Gn, -1, -2), atol=1e-5)
+    for b in range(Gn.shape[0]):
+        eig = np.linalg.eigvalsh(Gn[b])
+        assert eig.min() >= -1e-4
+
+
+def test_ops_fallback_large_shard():
+    """When the shard exceeds the VMEM budget, ops falls back to the jnp path."""
+    rng = np.random.default_rng(11)
+    X, nbr, val, nnz = _case(rng, 200_000, 8, 4, 16)
+    G0, g0 = ref.bpmf_gram_ref(X, nbr, val, nnz)
+    G1, g1 = ops.bpmf_gram(X, nbr, val, nnz)  # auto dispatch
+    np.testing.assert_allclose(np.asarray(G0), np.asarray(G1), rtol=1e-5, atol=1e-5)
