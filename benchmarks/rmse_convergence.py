@@ -1,10 +1,11 @@
 """Paper §V-B claim: every parallel version reaches the same RMSE.
 
-Runs the sequential oracle and the distributed sampler (ring + allgather,
-4 shards) on the same synthetic data/key and reports RMSE trajectories.
-The samplers share per-item fold_in randomness, so trajectories agree to
-float reduction order — asserted to ~1e-3 here, bitwise-level parity is in
-tests/test_distributed.py.
+Runs the same ``(seed, data)`` through all three backends of the
+``repro.bpmf`` engine facade (sequential, ring, allgather; the distributed
+ones on up to 4 shards) and reports RMSE trajectories. The samplers share
+per-item fold_in randomness, so trajectories agree to float reduction
+order — asserted to ~1e-3 here; bitwise-level parity is in
+tests/test_distributed.py and tests/test_engine.py.
 
 Run inside a >=4-device process (benchmarks.run handles this).
 """
@@ -13,42 +14,31 @@ from __future__ import annotations
 import sys
 
 import jax
-import numpy as np
 
 from benchmarks.common import save_result
-from repro.core.distributed import build_distributed_data, make_ring_mesh, run_distributed
-from repro.core.gibbs import run as run_sequential
-from repro.core.types import BPMFConfig
-from repro.data.sparse import build_bpmf_data
-from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
 
 
 def run(smoke: bool = False) -> dict:
-    spec = SyntheticSpec(
+    coo = load_dataset(
+        "synthetic",
         num_users=300 if smoke else 1_500,
         num_movies=200 if smoke else 600,
         nnz=5_000 if smoke else 50_000,
-        discretize=False,
         noise_std=0.4,
     )
-    coo, truth = synthetic_ratings(spec)
     K = 8 if smoke else 16
     sweeps = 4 if smoke else 20
-    cfg = BPMFConfig(K=K, num_sweeps=sweeps, burn_in=max(1, sweeps // 4))
-    key = jax.random.key(7)
+    w = min(4, len(jax.devices()))
+    cfg = BPMFConfig().replace(
+        K=K, num_sweeps=sweeps, burn_in=max(1, sweeps // 4), seed=7, num_shards=w
+    )
 
-    seq_data = build_bpmf_data(coo, test_fraction=0.1, seed=0)
-    _, _, hist_seq = run_sequential(key, seq_data, cfg)
-    curves = {"sequential": [m.rmse_avg for m in hist_seq]}
-
-    devices = jax.devices()
-    w = min(4, len(devices))
-    mesh = make_ring_mesh(devices[:w])
-    for mode in ("ring", "allgather"):
-        dcfg = BPMFConfig(K=K, num_sweeps=sweeps, burn_in=cfg.burn_in, comm_mode=mode)
-        ddata, _ = build_distributed_data(coo, num_shards=w, test_fraction=0.1, seed=0)
-        _, _, hist = run_distributed(key, ddata, dcfg, mesh)
-        curves[f"distributed_{mode}_{w}dev"] = [m.rmse_avg for m in hist]
+    curves = {}
+    for name in ("sequential", "ring", "allgather"):
+        engine = BPMFEngine(cfg.replace(name=name)).fit(coo)
+        label = name if name == "sequential" else f"distributed_{name}_{w}dev"
+        curves[label] = [m.rmse_avg for m in engine.history]
 
     finals = {k: v[-1] for k, v in curves.items()}
     spread = max(finals.values()) - min(finals.values())
@@ -56,7 +46,7 @@ def run(smoke: bool = False) -> dict:
         "curves": curves,
         "final_rmse": finals,
         "spread": spread,
-        "noise_floor": spec.noise_std,
+        "noise_floor": 0.4,
         "parity_ok": bool(spread < 5e-3),
     }
     print(f"[rmse] finals={ {k: round(v,4) for k,v in finals.items()} } spread={spread:.2e}")

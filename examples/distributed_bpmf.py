@@ -3,9 +3,10 @@
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/distributed_bpmf.py
 
-Shows: the cost-model load balancing (paper §IV-B), the ring rotation with
-compute/comm overlap (paper §IV-C) vs the synchronous all-gather baseline,
-and that both reach the same RMSE as the sequential sampler (paper §V-B).
+Runs the *same* ``(seed, data)`` through all three registered backends of
+the ``repro.bpmf`` engine — sequential oracle, ring rotation with
+compute/comm overlap (paper §IV-C), synchronous all-gather baseline — by
+flipping one config field, and checks they reach the same RMSE (paper §V-B).
 """
 import os
 
@@ -16,39 +17,36 @@ import time
 
 import jax
 
-from repro.core.distributed import build_distributed_data, make_ring_mesh, run_distributed
-from repro.core.gibbs import run as run_sequential
-from repro.core.types import BPMFConfig
-from repro.data.sparse import build_bpmf_data
-from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
 
 
 def main():
-    spec = SyntheticSpec(num_users=2_000, num_movies=500, nnz=40_000, discretize=False)
-    coo, _ = synthetic_ratings(spec)
-    cfg = BPMFConfig(K=16, num_sweeps=10, burn_in=2)
-    key = jax.random.key(0)
+    coo = load_dataset("synthetic", num_users=2_000, num_movies=500, nnz=40_000)
+    cfg = BPMFConfig().replace(K=16, num_sweeps=10, burn_in=2)
     S = len(jax.devices())
     print(f"{S} devices; R: {coo.num_users} x {coo.num_movies}, {coo.nnz} ratings")
 
-    seq_data = build_bpmf_data(coo, test_fraction=0.1, seed=0)
-    _, _, hist = run_sequential(key, seq_data, cfg)
-    print(f"sequential oracle     rmse={hist[-1].rmse_avg:.4f}")
-
-    mesh = make_ring_mesh()
-    for mode in ("ring", "allgather"):
-        dcfg = BPMFConfig(K=16, num_sweeps=10, burn_in=2, comm_mode=mode)
-        data, plan = build_distributed_data(coo, num_shards=S, seed=0)
-        if mode == "ring":
+    rmses = {}
+    for name in ("sequential", "ring", "allgather"):
+        engine = BPMFEngine(cfg.replace(name=name))
+        engine.prepare(coo)
+        if name == "ring":
+            plan = engine.backend.plan
             ratios = [f"{p.balance_ratio():.3f}" for p in (plan.part_users, plan.part_movies)]
-            print(f"LPT balance ratios (max/mean cost, 1.0=perfect): users={ratios[0]} movies={ratios[1]}")
-        run_distributed(key, data, dcfg, mesh)  # compile
+            print(f"LPT balance ratios (max/mean cost, 1.0=perfect): "
+                  f"users={ratios[0]} movies={ratios[1]}")
+        engine.fit()  # includes compile
+        timed = BPMFEngine(cfg.replace(name=name))
+        timed.prepare(coo)
         t0 = time.time()
-        _, _, dh = run_distributed(key, data, dcfg, mesh)
+        timed.fit()  # jit cache warm: measures the sweep loop itself
         dt = time.time() - t0
-        print(f"distributed {mode:9s} rmse={dh[-1].rmse_avg:.4f}  {dt:.2f}s "
-              f"({(coo.num_users + coo.num_movies) * cfg.num_sweeps / dt:,.0f} updates/s)")
-        assert abs(dh[-1].rmse_avg - hist[-1].rmse_avg) < 5e-3, "parity broken!"
+        rmses[name] = engine.rmse
+        print(f"{name:10s} rmse={engine.rmse:.4f}  {dt:.2f}s "
+              f"({(coo.num_users + coo.num_movies) * cfg.run.num_sweeps / dt:,.0f} updates/s)")
+
+    spread = max(rmses.values()) - min(rmses.values())
+    assert spread < 5e-3, f"parity broken! {rmses}"
     print("ok — all versions reach the same RMSE (paper §V-B)")
 
 

@@ -2,34 +2,30 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Factorizes R ~ U V^T with the Gibbs sampler (paper Algorithm 1) and shows
-the RMSE dropping toward the generative noise floor.
+Factorizes R ~ U V^T with the Gibbs sampler (paper Algorithm 1) through the
+``repro.bpmf`` engine facade and shows the RMSE dropping toward the
+generative noise floor. The same script runs distributed by changing
+``name="sequential"`` to ``"ring"`` — see examples/distributed_bpmf.py.
 """
-import jax
-
-from repro.core.gibbs import run
-from repro.core.types import BPMFConfig
-from repro.data.sparse import build_bpmf_data
+from repro.bpmf import BPMFConfig, BPMFEngine
 from repro.data.synthetic import small_test_ratings
 
 
 def main():
     coo, truth = small_test_ratings(num_users=400, num_movies=300, nnz=12_000, noise_std=0.35)
-    data = build_bpmf_data(coo, test_fraction=0.1, seed=0)
-    cfg = BPMFConfig(K=16, num_sweeps=25, burn_in=5)
+    cfg = BPMFConfig().replace(name="sequential", K=16, num_sweeps=25, burn_in=5)
 
-    print(f"R: {coo.num_users} x {coo.num_movies}, {coo.nnz} ratings; K={cfg.K}")
-    state, pred, history = run(
-        jax.random.key(0), data, cfg,
-        callback=lambda s, m: print(
-            f"  sweep {int(m.sweep):3d}  rmse(sample)={float(m.rmse_sample):.4f}  "
-            f"rmse(avg)={float(m.rmse_avg):.4f}"
-        ) if int(m.sweep) % 5 == 0 else None,
-    )
-    final = history[-1].rmse_avg
-    print(f"final averaged-prediction RMSE: {final:.4f} "
+    print(f"R: {coo.num_users} x {coo.num_movies}, {coo.nnz} ratings; K={cfg.model.K}")
+    engine = BPMFEngine(cfg)
+    for m in engine.sample(coo):
+        if int(m.sweep) % 5 == 0:
+            print(
+                f"  sweep {int(m.sweep):3d}  rmse(sample)={m.rmse_sample:.4f}  "
+                f"rmse(avg)={m.rmse_avg:.4f}"
+            )
+    print(f"final averaged-prediction RMSE: {engine.rmse:.4f} "
           f"(generative noise floor ~{truth['noise_std']})")
-    assert final < 2.5 * truth["noise_std"], "did not converge"
+    assert engine.rmse < 2.5 * truth["noise_std"], "did not converge"
     print("ok")
 
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+# Forces 8 host (CPU) devices so the distributed/ring code paths exercise a
+# real multi-device mesh, and puts src/ on PYTHONPATH. Subprocess-based
+# multidevice tests override the device count themselves
+# (tests/conftest.py strips and re-appends the flag).
+#
+#   scripts/test.sh               # full tier-1 suite
+#   scripts/test.sh tests/test_engine.py -k parity
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
+  export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+fi
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,31 @@
+"""``repro.bpmf`` — the unified BPMF engine API.
+
+One facade (:class:`BPMFEngine`) over the sequential, ring and allgather
+samplers; backend choice is a :class:`BackendConfig` knob, not an import
+decision. See DESIGN.md for the architecture (facade -> backend registry ->
+``repro.core``) and ``python -m repro.launch.bpmf --help`` for the CLI.
+"""
+from repro.bpmf.backends import (
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.bpmf.config import BackendConfig, BPMFConfig, ModelConfig, RunConfig
+from repro.bpmf.datasets import available_datasets, load_dataset, register_dataset
+from repro.bpmf.engine import BPMFEngine
+
+__all__ = [
+    "Backend",
+    "BackendConfig",
+    "BPMFConfig",
+    "BPMFEngine",
+    "ModelConfig",
+    "RunConfig",
+    "available_backends",
+    "available_datasets",
+    "get_backend",
+    "load_dataset",
+    "register_backend",
+    "register_dataset",
+]

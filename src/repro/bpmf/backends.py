@@ -1,0 +1,256 @@
+"""Backend registry: one sampler, several execution strategies.
+
+The paper's §V-B claim — sequential, shared-memory and distributed BPMF are
+the *same sampler* — is encoded here as a small protocol: every backend
+prepares its own data layout from the same :class:`RatingsCOO`, but draws
+identical posterior samples for identical ``(key, data)`` (up to float
+reduction order). ``BPMFEngine`` dispatches to a registry entry by
+``BackendConfig.name``; later scaling PRs add entries instead of new entry
+points.
+
+Registered backends:
+
+  * ``"sequential"`` — wraps :mod:`repro.core.gibbs` (single program)
+  * ``"ring"``       — wraps :mod:`repro.core.distributed`, §IV-C overlap
+  * ``"allgather"``  — same, synchronous all-gather baseline
+"""
+from __future__ import annotations
+
+import abc
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.bpmf.config import BPMFConfig
+from repro.core import distributed as dist
+from repro.core import gibbs
+from repro.core.gibbs import SweepMetrics
+from repro.core.prediction import PredictionState
+from repro.data.sparse import RatingsCOO, build_bpmf_data
+
+BACKENDS: dict[str, type["Backend"]] = {}
+
+
+def register_backend(name: str) -> Callable[[type["Backend"]], type["Backend"]]:
+    """Class decorator adding a backend under ``name`` (last wins)."""
+
+    def deco(cls: type["Backend"]) -> type["Backend"]:
+        cls.name = name
+        BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(cfg: BPMFConfig) -> "Backend":
+    name = cfg.backend.name
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; available: {sorted(BACKENDS)}")
+    return BACKENDS[name](cfg)
+
+
+def available_backends() -> list[str]:
+    return sorted(BACKENDS)
+
+
+class Backend(abc.ABC):
+    """Execution strategy for the BPMF Gibbs sampler.
+
+    Lifecycle: ``prepare(coo)`` once (host-side layout), then
+    ``init_state(key)`` / ``sweep(key, state, pred)`` repeatedly.
+    State pytrees are backend-specific (dense vs ring-sharded) but
+    checkpointable as-is; ``factors(state)`` recovers (U, V) in original
+    item order for prediction and cross-backend comparison.
+    """
+
+    name: str = "?"
+
+    def __init__(self, cfg: BPMFConfig):
+        self.cfg = cfg
+        self.core_cfg = cfg.core()
+        self._prepared = False
+
+    # ------------------------------------------------------------------
+    @abc.abstractmethod
+    def prepare(self, coo: RatingsCOO) -> None:
+        """Build the backend's data layout (split, center, bucket, shard)."""
+
+    @abc.abstractmethod
+    def init_state(self, key: jax.Array):
+        """Prior-predictive state; layout-independent per original item id."""
+
+    @abc.abstractmethod
+    def sweep(self, key: jax.Array, state, pred: PredictionState):
+        """One Gibbs sweep -> (state, pred, SweepMetrics)."""
+
+    @abc.abstractmethod
+    def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
+        """(U, V) as host arrays in *original* item order."""
+
+    # ------------------------------------------------------------------
+    @property
+    def prepared(self) -> bool:
+        return self._prepared
+
+    def init_pred(self) -> PredictionState:
+        return PredictionState.init(self.num_test)
+
+    @property
+    @abc.abstractmethod
+    def num_test(self) -> int:
+        ...
+
+    @property
+    @abc.abstractmethod
+    def test_vals(self) -> jax.Array:
+        ...
+
+    @property
+    @abc.abstractmethod
+    def mean_rating(self) -> float:
+        ...
+
+    @property
+    @abc.abstractmethod
+    def rating_range(self) -> tuple[float, float]:
+        ...
+
+
+# --------------------------------------------------------------------------
+# Sequential (the single-program oracle)
+# --------------------------------------------------------------------------
+
+
+@register_backend("sequential")
+class SequentialBackend(Backend):
+    """Single-program Algorithm 1 via :mod:`repro.core.gibbs`."""
+
+    def prepare(self, coo: RatingsCOO) -> None:
+        self.data = build_bpmf_data(
+            coo,
+            pads=self.cfg.backend.bucket_pads,
+            test_fraction=self.cfg.run.test_fraction,
+            seed=self.cfg.run.seed,
+        )
+        self._prepared = True
+
+    def init_state(self, key: jax.Array):
+        return gibbs.init_state(key, self.data.num_users, self.data.num_movies, self.core_cfg)
+
+    def sweep(self, key: jax.Array, state, pred: PredictionState):
+        return gibbs.gibbs_sweep(key, state, pred, self.data, self.core_cfg)
+
+    def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
+        return np.asarray(state.U), np.asarray(state.V)
+
+    @property
+    def num_test(self) -> int:
+        return int(self.data.test.rows.shape[0])
+
+    @property
+    def test_vals(self) -> jax.Array:
+        return self.data.test.vals
+
+    @property
+    def mean_rating(self) -> float:
+        return float(self.data.mean_rating)
+
+    @property
+    def rating_range(self) -> tuple[float, float]:
+        return self.data.min_rating, self.data.max_rating
+
+
+# --------------------------------------------------------------------------
+# Distributed (ring / allgather over a device mesh)
+# --------------------------------------------------------------------------
+
+
+class _DistributedBackend(Backend):
+    """Shared machinery for the shard_map backends (paper §IV)."""
+
+    def prepare(self, coo: RatingsCOO) -> None:
+        devices = jax.devices()
+        S = self.cfg.backend.num_shards or len(devices)
+        if S > len(devices):
+            raise ValueError(
+                f"BackendConfig.num_shards={S} exceeds the {len(devices)} visible "
+                f"device(s); lower it or force more host devices "
+                f"(XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+            )
+        self.mesh = dist.make_ring_mesh(devices[:S])
+        data, self.plan = dist.build_distributed_data(
+            coo,
+            num_shards=S,
+            pads=self.cfg.backend.bucket_pads,
+            test_fraction=self.cfg.run.test_fraction,
+            seed=self.cfg.run.seed,
+            strategy=self.cfg.backend.partition_strategy,
+        )
+        self.data = dist.shard_data(data, self.mesh)
+        self.num_shards = S
+        self._prepared = True
+
+    def init_state(self, key: jax.Array):
+        return dist.init_dist_state(key, self.data, self.core_cfg, self.mesh)
+
+    def sweep(self, key: jax.Array, state, pred: PredictionState):
+        return dist.dist_gibbs_sweep(key, state, pred, self.data, self.core_cfg, self.mesh)
+
+    def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
+        return dist.gather_factors(state, self.plan)
+
+    @property
+    def num_test(self) -> int:
+        return int(self.data.test.rows.shape[0])
+
+    @property
+    def test_vals(self) -> jax.Array:
+        return self.data.test.vals
+
+    @property
+    def mean_rating(self) -> float:
+        return float(self.data.mean_rating)
+
+    @property
+    def rating_range(self) -> tuple[float, float]:
+        return self.data.min_rating, self.data.max_rating
+
+
+@register_backend("ring")
+class RingBackend(_DistributedBackend):
+    """Paper §IV-C: ppermute rotation with compute/comm overlap."""
+
+
+@register_backend("allgather")
+class AllGatherBackend(_DistributedBackend):
+    """Synchronous baseline: blocking all-gather then local updates."""
+
+
+# --------------------------------------------------------------------------
+# Legacy driver (kept for repro.core.gibbs.run)
+# --------------------------------------------------------------------------
+
+
+def run_sequential_prepared(
+    key: jax.Array,
+    data,
+    core_cfg,
+    callback=None,
+) -> tuple[object, PredictionState, list[SweepMetrics]]:
+    """The pre-facade ``core.gibbs.run`` loop, over already-built BPMFData.
+
+    Kept here so ``core.gibbs.run`` can stay a thin deprecation-safe wrapper
+    while the engine owns all new run-loop features (checkpointing,
+    streaming metrics).
+    """
+    k_init, k_run = jax.random.split(key)
+    state = gibbs.init_state(k_init, data.num_users, data.num_movies, core_cfg)
+    pred_state = PredictionState.init(data.test.rows.shape[0])
+    history: list[SweepMetrics] = []
+    for _ in range(core_cfg.num_sweeps):
+        state, pred_state, metrics = gibbs.gibbs_sweep(k_run, state, pred_state, data, core_cfg)
+        history.append(jax.tree_util.tree_map(float, metrics))
+        if callback is not None:
+            callback(state, metrics)
+    return state, pred_state, history

@@ -1,0 +1,116 @@
+"""Engine configuration: the model / run / backend split.
+
+The legacy ``repro.core.types.BPMFConfig`` mixed three concerns into one
+flat dataclass: what the model *is* (K, alpha, prior), how long to *run*
+(sweeps, burn-in) and *where/how* to execute (comm_mode, use_pallas).
+The engine API separates them so that switching execution backends —
+sequential, ring, allgather, Pallas on or off — is a config knob with no
+model or schedule implications:
+
+  * :class:`ModelConfig`   — the statistical model (paper §III)
+  * :class:`RunConfig`     — schedule, data split, checkpointing
+  * :class:`BackendConfig` — execution: backend name, shard count, kernels
+
+``BPMFConfig`` (this module's, not ``core.types``') bundles the three and
+lowers to the legacy flat config via :meth:`BPMFConfig.core` for the
+kernel-level code, which stays untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core import types as core_types
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """The BPMF model itself (paper §III): rank, noise and prior."""
+
+    K: int = 32
+    alpha: float = 2.0  # rating noise precision
+    beta0: float = 2.0  # Normal-Wishart prior strength
+    sample_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32  # Gram contraction dtype (bf16 on TPU)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Schedule, data split and checkpoint policy for one fit."""
+
+    num_sweeps: int = 50
+    burn_in: int = 8
+    seed: int = 0  # seeds both the train/test split and the sampler key
+    test_fraction: float = 0.1
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0  # sweeps between auto-saves; 0 = explicit save() only
+    keep_checkpoints: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """Execution backend selection — the knob the paper's §V compares.
+
+    ``name`` picks an entry from the backend registry
+    (:mod:`repro.bpmf.backends`): ``"sequential"`` (single-program oracle),
+    ``"ring"`` (paper §IV-C overlap schedule) or ``"allgather"``
+    (synchronous baseline).
+    """
+
+    name: str = "sequential"
+    num_shards: int = 0  # 0 = one shard per visible device (distributed only)
+    use_pallas: bool = False  # route Gram terms through the Pallas kernel
+    bucket_pads: tuple[int, ...] = (8, 32, 128, 512, 2048)
+    partition_strategy: str = "lpt"  # cost-model balancing (paper §IV-B)
+
+
+@dataclasses.dataclass(frozen=True)
+class BPMFConfig:
+    """Everything :class:`repro.bpmf.BPMFEngine` needs, in one object."""
+
+    model: ModelConfig = ModelConfig()
+    run: RunConfig = RunConfig()
+    backend: BackendConfig = BackendConfig()
+
+    def core(self) -> core_types.BPMFConfig:
+        """Lower to the legacy flat (hashable) config used by the kernels."""
+        comm_mode = self.backend.name if self.backend.name in ("ring", "allgather") else "ring"
+        return core_types.BPMFConfig(
+            K=self.model.K,
+            alpha=self.model.alpha,
+            num_sweeps=self.run.num_sweeps,
+            burn_in=self.run.burn_in,
+            beta0=self.model.beta0,
+            bucket_pads=tuple(self.backend.bucket_pads),
+            comm_mode=comm_mode,
+            sample_dtype=self.model.sample_dtype,
+            compute_dtype=self.model.compute_dtype,
+            use_pallas=self.backend.use_pallas,
+        )
+
+    def replace(self, **kw: Any) -> "BPMFConfig":
+        """`dataclasses.replace` that also reaches one level down.
+
+        Keys matching a sub-config field are routed there, so
+        ``cfg.replace(name="ring", num_sweeps=10)`` works without spelling
+        out the nesting.
+        """
+        subs = {"model": self.model, "run": self.run, "backend": self.backend}
+        updates: dict[str, dict[str, Any]] = {k: {} for k in subs}
+        top: dict[str, Any] = {}
+        for key, val in kw.items():
+            if key in subs:
+                top[key] = val
+                continue
+            for sub_name, sub in subs.items():
+                if any(f.name == key for f in dataclasses.fields(sub)):
+                    updates[sub_name][key] = val
+                    break
+            else:
+                raise TypeError(f"unknown BPMFConfig field: {key!r}")
+        for sub_name, up in updates.items():
+            if up:
+                top[sub_name] = dataclasses.replace(subs[sub_name], **up)
+        return dataclasses.replace(self, **top)

@@ -1,0 +1,74 @@
+"""Dataset registry behind ``repro.bpmf.load_dataset(name, **kw)``.
+
+Loaders return a :class:`repro.data.sparse.RatingsCOO`; the engine owns the
+train/test split and layout so every backend sees the identical split.
+New workloads register here instead of adding another ad-hoc script::
+
+    @register_dataset("my-data")
+    def _load(path=None):
+        return RatingsCOO(...)
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.data.movielens import load_chembl, load_movielens
+from repro.data.sparse import RatingsCOO
+from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+
+DATASETS: dict[str, Callable[..., RatingsCOO]] = {}
+
+
+def register_dataset(name: str) -> Callable[[Callable[..., RatingsCOO]], Callable[..., RatingsCOO]]:
+    def deco(fn: Callable[..., RatingsCOO]) -> Callable[..., RatingsCOO]:
+        DATASETS[name] = fn
+        return fn
+
+    return deco
+
+
+def load_dataset(name: str, **kw) -> RatingsCOO:
+    """Load a registered dataset by name; kwargs go to its loader."""
+    if name not in DATASETS:
+        raise ValueError(f"unknown dataset {name!r}; available: {sorted(DATASETS)}")
+    return DATASETS[name](**kw)
+
+
+def available_datasets() -> list[str]:
+    return sorted(DATASETS)
+
+
+@register_dataset("synthetic")
+def _synthetic(
+    num_users: int = 400,
+    num_movies: int = 300,
+    nnz: int = 12_000,
+    true_rank: int = 8,
+    noise_std: float = 0.5,
+    discretize: bool = False,
+    seed: int = 0,
+) -> RatingsCOO:
+    """Low-rank + noise ratings with MovieLens-shaped degree skew."""
+    spec = SyntheticSpec(
+        num_users=num_users,
+        num_movies=num_movies,
+        nnz=nnz,
+        true_rank=true_rank,
+        noise_std=noise_std,
+        discretize=discretize,
+        seed=seed,
+    )
+    coo, _ = synthetic_ratings(spec)
+    return coo
+
+
+@register_dataset("movielens")
+def _movielens(path: str | None = None, variant: str = "ml-100k") -> RatingsCOO:
+    """Real ml-20m/ml-100k files when ``path`` exists, else synthetic stand-in."""
+    return load_movielens(path, variant)
+
+
+@register_dataset("chembl")
+def _chembl(path: str | None = None) -> RatingsCOO:
+    """ChEMBL IC50 compound x target subset (paper §V workload)."""
+    return load_chembl(path)

@@ -1,0 +1,212 @@
+"""``BPMFEngine`` — the single front door to every BPMF sampler.
+
+One facade over the sequential oracle and the distributed ring/allgather
+samplers (paper §V-B: they are the same sampler), with the run loop,
+sweep-level checkpointing and metric streaming factored out of the
+backends::
+
+    from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+
+    coo = load_dataset("synthetic", num_users=400, num_movies=300, nnz=12_000)
+    cfg = BPMFConfig().replace(name="ring", K=16, num_sweeps=25)
+    engine = BPMFEngine(cfg).fit(coo)
+    print(engine.rmse)
+
+Backend choice is config-only: the same ``(seed, data)`` run through
+``"sequential"``, ``"ring"`` and ``"allgather"`` yields the same posterior
+samples up to float reduction order (tests/test_engine.py asserts this).
+
+Determinism note: the sampler key is derived from ``RunConfig.seed`` and
+per-sweep keys from ``(key, state.sweep)``, so a run restored from a
+checkpoint continues with *identical* randomness to an uninterrupted one.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.bpmf.backends import Backend, get_backend
+from repro.bpmf.config import BPMFConfig
+from repro.checkpoint import CheckpointManager
+from repro.core.gibbs import SweepMetrics
+from repro.data.sparse import RatingsCOO
+
+
+class BPMFEngine:
+    """Fit / sample / predict / save / restore over a pluggable backend."""
+
+    def __init__(self, cfg: BPMFConfig | None = None):
+        self.cfg = cfg or BPMFConfig()
+        self.backend: Backend = get_backend(self.cfg)
+        self.history: list[SweepMetrics] = []
+        self._state = None
+        self._pred = None
+        self._sweeps_done = 0
+        self._data_fingerprint: tuple[int, int, int] | None = None
+        self._ckpt: Optional[CheckpointManager] = None
+        key = jax.random.key(self.cfg.run.seed)
+        self._k_init, self._k_run = jax.random.split(key)
+
+    # ------------------------------------------------------------------
+    # data / state plumbing
+    # ------------------------------------------------------------------
+    def prepare(self, data: RatingsCOO) -> "BPMFEngine":
+        """Host-side layout (split, center, bucket, shard). Idempotent.
+
+        Re-passing the same dataset is a no-op; passing a *different* one
+        (detected by shape/nnz) raises — an engine is bound to one dataset
+        for its lifetime, so metrics and checkpoints stay coherent.
+        """
+        fingerprint = (data.num_users, data.num_movies, data.nnz)
+        if self.backend.prepared:
+            if fingerprint != self._data_fingerprint:
+                raise ValueError(
+                    f"engine already prepared for R {self._data_fingerprint}; "
+                    f"got different data {fingerprint} — build a new BPMFEngine"
+                )
+            return self
+        self.backend.prepare(data)
+        self._data_fingerprint = fingerprint
+        return self
+
+    def _ensure_state(self) -> None:
+        if not self.backend.prepared:
+            raise RuntimeError("no data: call fit(data) / sample(data) / prepare(data) first")
+        if self._state is None:
+            self._state = self.backend.init_state(self._k_init)
+            self._pred = self.backend.init_pred()
+            self._sweeps_done = 0
+
+    def _manager(self) -> CheckpointManager:
+        if self._ckpt is None:
+            if not self.cfg.run.checkpoint_dir:
+                raise ValueError("RunConfig.checkpoint_dir is not set")
+            self._ckpt = CheckpointManager(
+                self.cfg.run.checkpoint_dir,
+                keep=self.cfg.run.keep_checkpoints,
+                async_writes=False,
+            )
+        return self._ckpt
+
+    # ------------------------------------------------------------------
+    # the run loop
+    # ------------------------------------------------------------------
+    def sample(self, data: RatingsCOO | None = None) -> Iterator[SweepMetrics]:
+        """Stream per-sweep metrics from the current sweep to ``num_sweeps``.
+
+        Resumable: after ``restore()`` the iterator continues where the
+        checkpoint left off, drawing the same randomness an uninterrupted
+        run would have.
+        """
+        if data is not None:
+            self.prepare(data)
+        self._ensure_state()
+        every = self.cfg.run.checkpoint_every
+        while self._sweeps_done < self.cfg.run.num_sweeps:
+            self._state, self._pred, metrics = self.backend.sweep(
+                self._k_run, self._state, self._pred
+            )
+            self._sweeps_done += 1
+            metrics = jax.tree_util.tree_map(float, metrics)
+            self.history.append(metrics)
+            if every and self._sweeps_done % every == 0:
+                self.save()
+            yield metrics
+
+    def fit(self, data: RatingsCOO | None = None, resume: bool = False) -> "BPMFEngine":
+        """Run (or finish) all sweeps; returns self.
+
+        ``resume=True`` restores the latest checkpoint from
+        ``RunConfig.checkpoint_dir`` (if any) before continuing.
+        """
+        if data is not None:
+            self.prepare(data)
+        if resume and self.cfg.run.checkpoint_dir and self._manager().latest() is not None:
+            self.restore()
+        for _ in self.sample():
+            pass
+        return self
+
+    # ------------------------------------------------------------------
+    # results
+    # ------------------------------------------------------------------
+    @property
+    def rmse(self) -> float:
+        """Posterior-mean test RMSE after the last completed sweep."""
+        if not self.history:
+            raise RuntimeError("no sweeps run yet")
+        return float(self.history[-1].rmse_avg)
+
+    @property
+    def num_sweeps_done(self) -> int:
+        return self._sweeps_done
+
+    @property
+    def state(self):
+        return self._state
+
+    def factors(self) -> tuple[np.ndarray, np.ndarray]:
+        """(U, V) of the current posterior sample, original item order."""
+        self._ensure_state()
+        return self.backend.factors(self._state)
+
+    def predict(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        """Point predictions for arbitrary (user, movie) pairs.
+
+        Uses the current posterior sample's factors; for posterior-mean
+        test-set predictions use the streamed ``rmse_avg`` metrics.
+        """
+        U, V = self.factors()
+        lo, hi = self.backend.rating_range
+        preds = np.einsum("nk,nk->n", U[np.asarray(rows)], V[np.asarray(cols)])
+        return np.clip(preds + self.backend.mean_rating, lo, hi)
+
+    # ------------------------------------------------------------------
+    # checkpointing (sweep-level save / resume)
+    # ------------------------------------------------------------------
+    def save(self, step: int | None = None) -> int:
+        """Checkpoint state, prediction accumulator and metric history at
+        ``step`` (default: current sweep)."""
+        self._ensure_state()
+        step = self._sweeps_done if step is None else step
+        hist = np.asarray(
+            [[m.rmse_sample, m.rmse_avg, m.sweep] for m in self.history[:step]],
+            np.float32,
+        ).reshape(-1, 3)
+        self._manager().save(
+            step, {"state": self._state, "pred": self._pred, "history": hist}
+        )
+        return step
+
+    def restore(self, data: RatingsCOO | None = None, step: int | None = None) -> int:
+        """Load a checkpoint and position the run loop at its sweep count.
+
+        The backend must be prepared (pass ``data`` here or call
+        ``prepare`` first) so the restore target has the right shapes.
+        Metric history up to the checkpointed sweep is restored too, so
+        ``rmse`` and ``history`` are complete even in a fresh process.
+        """
+        if data is not None:
+            self.prepare(data)
+        self._ensure_state()
+        mgr = self._manager()
+        step = mgr.latest() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.cfg.run.checkpoint_dir}")
+        tree = mgr.restore(
+            {
+                "state": self._state,
+                "pred": self._pred,
+                "history": np.zeros((0, 3), np.float32),
+            },
+            step=step,
+        )
+        self._state, self._pred = tree["state"], tree["pred"]
+        self._sweeps_done = step
+        self.history = [
+            SweepMetrics(float(r[0]), float(r[1]), float(r[2]))
+            for r in np.asarray(tree["history"])
+        ]
+        return step

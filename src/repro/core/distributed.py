@@ -28,10 +28,28 @@ import dataclasses
 import functools
 from typing import Any, Sequence
 
+import inspect
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+
+try:  # jax >= 0.5: public top-level API
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the "skip replication check" kwarg was renamed check_rep -> check_vma
+_SHARD_MAP_CHECK_KW = (
+    "check_vma" if "check_vma" in inspect.signature(_shard_map).parameters else "check_rep"
+)
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kwargs):
+    kwargs.setdefault(_SHARD_MAP_CHECK_KW, False)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -536,7 +554,6 @@ def dist_gibbs_sweep(
             data_specs(data),
         ),
         out_specs=(ring, ring, hyper_spec, hyper_spec, rep, rep, rep, rep),
-        check_vma=False,
     )
     U, V, hU, hV, sweep, psum_, pn, r = fn(
         key, state.U, state.V, state.sweep, pred_state.sum_pred, pred_state.num_samples, data

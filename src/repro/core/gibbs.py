@@ -106,14 +106,13 @@ def run(
     cfg: BPMFConfig,
     callback=None,
 ) -> tuple[BPMFState, PredictionState, list[SweepMetrics]]:
-    """Run ``cfg.num_sweeps`` sweeps; returns final state and metric history."""
-    k_init, k_run = jax.random.split(key)
-    state = init_state(k_init, data.num_users, data.num_movies, cfg)
-    pred_state = PredictionState.init(data.test.rows.shape[0])
-    history: list[SweepMetrics] = []
-    for _ in range(cfg.num_sweeps):
-        state, pred_state, metrics = gibbs_sweep(k_run, state, pred_state, data, cfg)
-        history.append(jax.tree_util.tree_map(lambda x: float(x), metrics))
-        if callback is not None:
-            callback(state, metrics)
-    return state, pred_state, history
+    """Deprecated entry point — prefer ``repro.bpmf.BPMFEngine``.
+
+    Thin wrapper over the sequential backend's run loop
+    (:func:`repro.bpmf.backends.run_sequential_prepared`); kept so existing
+    imports keep working. New run-loop features (checkpointing, streaming
+    metrics, backend selection) live only on the engine facade.
+    """
+    from repro.bpmf.backends import run_sequential_prepared
+
+    return run_sequential_prepared(key, data, cfg, callback)

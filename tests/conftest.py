@@ -1,5 +1,6 @@
 """Shared pytest config + helpers for multi-device subprocess tests."""
 import os
+import re
 import subprocess
 import sys
 import textwrap
@@ -12,16 +13,53 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "multidevice: runs a subprocess with forced host devices")
 
 
+def optional_hypothesis():
+    """``(given, settings, st)`` — real hypothesis, or skipping stubs.
+
+    hypothesis is an optional dependency: when it is missing, property
+    tests are skipped (not errored at collection) and the rest of the
+    module still runs. Usage in a test module::
+
+        from conftest import optional_hypothesis
+        given, settings, st = optional_hypothesis()
+    """
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        return given, settings, st
+    except ModuleNotFoundError:
+        skip = pytest.mark.skip(reason="hypothesis not installed")
+
+        class _AnyStrategy:
+            """Accepts any strategy construction; values are never drawn."""
+
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            return lambda fn: skip(fn)
+
+        def settings(*a, **k):
+            return lambda fn: fn
+
+        return given, settings, _AnyStrategy()
+
+
 def run_with_devices(code: str, num_devices: int, timeout: int = 600) -> str:
     """Run ``code`` in a fresh python with N forced host devices.
 
-    The main test process keeps its single CPU device (jax locks the device
-    count at first backend init), so anything multi-device runs out of
-    process. Raises on non-zero exit; returns stdout.
+    The main test process keeps its device count (jax locks it at first
+    backend init), so anything needing a different mesh runs out of
+    process. Any inherited device-count flag is stripped so the requested
+    count always wins. Raises on non-zero exit; returns stdout.
     """
     env = dict(os.environ)
+    flags = re.sub(
+        r"--xla_force_host_platform_device_count=\d+", "", env.get("XLA_FLAGS", "")
+    ).strip()
     env["XLA_FLAGS"] = (
-        env.get("XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={num_devices}"
+        f"{flags} --xla_force_host_platform_device_count={num_devices}"
     ).strip()
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run(

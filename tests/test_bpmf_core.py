@@ -3,8 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core import BPMFConfig, run
 from repro.core import posterior
@@ -184,22 +185,24 @@ def test_zero_rating_item_samples_from_prior_conditional():
 
 @pytest.mark.slow
 def test_gibbs_converges_to_noise_floor():
+    from repro.bpmf import BPMFConfig as EngineConfig, BPMFEngine
+
     coo, truth = small_test_ratings(num_users=200, num_movies=120, nnz=8000)
-    data = build_bpmf_data(coo, pads=(8, 32, 128), test_fraction=0.1, seed=0)
-    cfg = BPMFConfig(K=8, num_sweeps=50, burn_in=10)
-    _, _, hist = run(jax.random.key(0), data, cfg)
-    final = hist[-1].rmse_avg
+    cfg = EngineConfig().replace(K=8, num_sweeps=50, burn_in=10, bucket_pads=(8, 32, 128))
+    engine = BPMFEngine(cfg).fit(coo)
+    final = engine.rmse
     assert final < 1.5 * truth["noise_std"], f"rmse {final} vs floor {truth['noise_std']}"
     # RMSE must improve over the first sweep substantially
-    assert final < 0.6 * hist[0].rmse_sample
+    assert final < 0.6 * engine.history[0].rmse_sample
 
 
 def test_gibbs_deterministic():
+    from repro.bpmf import BPMFConfig as EngineConfig, BPMFEngine
+
     coo, _ = small_test_ratings(num_users=60, num_movies=40, nnz=1200)
-    data = build_bpmf_data(coo, pads=(8, 32), test_fraction=0.1, seed=0)
-    cfg = BPMFConfig(K=4, num_sweeps=3, burn_in=1)
-    _, _, h1 = run(jax.random.key(0), data, cfg)
-    _, _, h2 = run(jax.random.key(0), data, cfg)
+    cfg = EngineConfig().replace(K=4, num_sweeps=3, burn_in=1, bucket_pads=(8, 32))
+    h1 = BPMFEngine(cfg).fit(coo).history
+    h2 = BPMFEngine(cfg).fit(coo).history
     assert [m.rmse_sample for m in h1] == [m.rmse_sample for m in h2]
 
 

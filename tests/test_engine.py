@@ -1,0 +1,246 @@
+"""Engine facade tests: registry dispatch, cross-backend parity (paper
+§V-B as an API-level property), checkpoint round-trip, CLI smoke.
+
+Multi-device runs go through conftest.run_with_devices subprocesses; the
+in-process tests use whatever device count the main process has (ring and
+allgather degrade gracefully to one shard).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+from repro.bpmf import (
+    BPMFConfig,
+    BPMFEngine,
+    available_backends,
+    available_datasets,
+    load_dataset,
+)
+from repro.data.sparse import RatingsCOO
+
+
+def _small_cfg(**kw) -> BPMFConfig:
+    base = dict(K=6, num_sweeps=4, burn_in=1, bucket_pads=(8, 32, 128))
+    base.update(kw)
+    return BPMFConfig().replace(**base)
+
+
+def _small_coo(seed: int = 3) -> RatingsCOO:
+    return load_dataset(
+        "synthetic", num_users=90, num_movies=45, nnz=1000, noise_std=0.3, seed=seed
+    )
+
+
+# ---------- registries / config ----------
+
+
+def test_backend_registry():
+    assert {"sequential", "ring", "allgather"} <= set(available_backends())
+    with pytest.raises(ValueError, match="unknown backend"):
+        BPMFEngine(BPMFConfig().replace(name="mpi"))
+
+
+def test_dataset_registry():
+    assert {"synthetic", "movielens", "chembl"} <= set(available_datasets())
+    coo = _small_coo()
+    assert isinstance(coo, RatingsCOO) and coo.nnz > 0
+    with pytest.raises(ValueError, match="unknown dataset"):
+        load_dataset("netflix-prize")
+
+
+def test_config_replace_routes_to_subconfigs():
+    cfg = BPMFConfig().replace(name="ring", K=12, num_sweeps=9, use_pallas=True, seed=5)
+    assert cfg.backend.name == "ring" and cfg.backend.use_pallas
+    assert cfg.model.K == 12
+    assert cfg.run.num_sweeps == 9 and cfg.run.seed == 5
+    with pytest.raises(TypeError, match="unknown"):
+        cfg.replace(warp_drive=True)
+
+
+def test_config_lowers_to_core():
+    cfg = _small_cfg(name="allgather", alpha=1.5)
+    core = cfg.core()
+    assert core.comm_mode == "allgather"
+    assert core.K == 6 and core.alpha == 1.5 and core.num_sweeps == 4
+    hash(core)  # must stay hashable for jit static args
+
+
+# ---------- cross-backend parity (the paper's §V-B claim, facade-level) ----------
+
+
+def test_cross_backend_parity_in_process():
+    """Same (seed, data) through all three backends via config alone."""
+    coo = _small_coo()
+    results = {}
+    for name in available_backends():
+        engine = BPMFEngine(_small_cfg(name=name)).fit(coo)
+        results[name] = (engine.history, engine.factors())
+    ref_hist, (ref_U, ref_V) = results["sequential"]
+    for name, (hist, (U, V)) in results.items():
+        np.testing.assert_allclose(U, ref_U, atol=2e-3, err_msg=name)
+        np.testing.assert_allclose(V, ref_V, atol=2e-3, err_msg=name)
+        for m, mr in zip(hist, ref_hist):
+            assert abs(m.rmse_avg - mr.rmse_avg) < 1e-3, (name, m, mr)
+
+
+ENGINE_PARITY_CODE = """
+import numpy as np
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+
+coo = load_dataset("synthetic", num_users=120, num_movies=45, nnz=1080,
+                   noise_std=0.3, seed=3)
+cfg = BPMFConfig().replace(K=8, num_sweeps=4, burn_in=1, bucket_pads=(8, 32, 128))
+out = {}
+for name in ("sequential", "ring", "allgather"):
+    e = BPMFEngine(cfg.replace(name=name)).fit(coo)
+    out[name] = (e.factors(), e.rmse)
+for name in ("ring", "allgather"):
+    (U, V), r = out[name]
+    (U0, V0), r0 = out["sequential"]
+    print(name.upper() + "_ERRU", float(np.max(np.abs(U - U0))))
+    print(name.upper() + "_ERRV", float(np.max(np.abs(V - V0))))
+    print(name.upper() + "_DRMSE", abs(r - r0))
+"""
+
+
+@pytest.mark.multidevice
+def test_cross_backend_parity_multidevice():
+    """Facade parity with the distributed backends on a real 4-device mesh."""
+    out = run_with_devices(ENGINE_PARITY_CODE, num_devices=4)
+    vals = {}
+    for line in out.splitlines():
+        parts = line.split()
+        if len(parts) == 2 and ("ERR" in parts[0] or "DRMSE" in parts[0]):
+            vals[parts[0]] = float(parts[1])
+    assert vals, out
+    for k, v in vals.items():
+        tol = 1e-3 if "DRMSE" in k else 2e-3
+        assert v < tol, (k, v, vals)
+
+
+def test_legacy_run_wrapper_matches_engine():
+    """core.gibbs.run stays alive as a thin wrapper over the sequential backend."""
+    from repro.core.gibbs import run as legacy_run
+    from repro.data.sparse import build_bpmf_data
+
+    coo = _small_coo(seed=9)
+    cfg = _small_cfg()
+    engine = BPMFEngine(cfg).fit(coo)
+    data = build_bpmf_data(
+        coo, pads=cfg.backend.bucket_pads, test_fraction=cfg.run.test_fraction,
+        seed=cfg.run.seed,
+    )
+    _, _, hist = legacy_run(jax.random.key(cfg.run.seed), data, cfg.core())
+    assert [m.rmse_sample for m in hist] == [m.rmse_sample for m in engine.history]
+
+
+# ---------- checkpoint round-trip ----------
+
+
+@pytest.mark.parametrize("name", ["sequential", "ring"])
+def test_checkpoint_roundtrip_resumes_identically(tmp_path, name):
+    """save() mid-run -> restore() in a fresh engine -> identical metrics."""
+    coo = _small_coo(seed=5)
+    cfg = _small_cfg(name=name, num_sweeps=6, checkpoint_dir=str(tmp_path / name))
+
+    full = BPMFEngine(cfg).fit(coo)
+
+    interrupted = BPMFEngine(cfg)
+    it = interrupted.sample(coo)
+    for _ in range(3):
+        next(it)
+    saved_at = interrupted.save()
+    assert saved_at == 3
+    del interrupted, it
+
+    resumed = BPMFEngine(cfg)
+    assert resumed.restore(coo) == 3
+    assert len(resumed.history) == 3  # metric history travels with the checkpoint
+    resumed.fit()
+    assert resumed.num_sweeps_done == cfg.run.num_sweeps
+    got = [m.rmse_avg for m in resumed.history]
+    want = [m.rmse_avg for m in full.history]
+    assert got == want, (got, want)
+    np.testing.assert_array_equal(resumed.factors()[0], full.factors()[0])
+
+
+def test_checkpoint_every_autosaves(tmp_path):
+    coo = _small_coo(seed=6)
+    cfg = _small_cfg(num_sweeps=4, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    engine = BPMFEngine(cfg).fit(coo)
+    assert engine._manager().all_steps() == [2, 4]
+    # fit(resume=True) on a fresh engine picks up the final checkpoint,
+    # including the metric history (so .rmse works on a completed run)
+    again = BPMFEngine(cfg)
+    again.prepare(coo)
+    again.fit(resume=True)
+    assert again.num_sweeps_done == 4
+    assert [m.rmse_avg for m in again.history] == [m.rmse_avg for m in engine.history]
+    assert again.rmse == engine.rmse
+
+
+def test_num_shards_exceeding_devices_raises():
+    cfg = _small_cfg(name="ring", num_shards=len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="num_shards"):
+        BPMFEngine(cfg).prepare(_small_coo())
+
+
+def test_prepare_rejects_different_data():
+    engine = BPMFEngine(_small_cfg())
+    engine.prepare(_small_coo())
+    engine.prepare(_small_coo())  # same dataset: fine
+    other = load_dataset("synthetic", num_users=30, num_movies=20, nnz=200)
+    with pytest.raises(ValueError, match="different data"):
+        engine.prepare(other)
+
+
+def test_restore_without_checkpoint_raises(tmp_path):
+    cfg = _small_cfg(checkpoint_dir=str(tmp_path))
+    engine = BPMFEngine(cfg)
+    with pytest.raises(FileNotFoundError):
+        engine.restore(_small_coo())
+
+
+# ---------- predictions ----------
+
+
+def test_predict_clipped_and_shaped():
+    coo = _small_coo()
+    engine = BPMFEngine(_small_cfg()).fit(coo)
+    rows = np.arange(10, dtype=np.int32)
+    cols = np.arange(10, dtype=np.int32)
+    preds = engine.predict(rows, cols)
+    lo, hi = engine.backend.rating_range
+    assert preds.shape == (10,)
+    assert np.all(preds >= lo - 1e-6) and np.all(preds <= hi + 1e-6)
+
+
+# ---------- CLI ----------
+
+
+def test_cli_smoke():
+    """python -m repro.launch.bpmf completes and prints per-sweep RMSE."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.bpmf",
+            "--backend", "sequential", "--dataset", "synthetic",
+            "--sweeps", "3", "--burn-in", "1", "--K", "4",
+            "--users", "80", "--movies", "40", "--nnz", "800",
+        ],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "rmse(avg)" in proc.stdout
+    assert "final rmse(avg)=" in proc.stdout
