@@ -3,10 +3,11 @@
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/distributed_bpmf.py
 
-Runs the *same* ``(seed, data)`` through all three registered backends of
-the ``repro.bpmf`` engine — sequential oracle, ring rotation with
-compute/comm overlap (paper §IV-C), synchronous all-gather baseline — by
-flipping one config field, and checks they reach the same RMSE (paper §V-B).
+Runs the *same* ``(seed, data)`` through all registered backends of the
+``repro.bpmf`` engine — sequential oracle, ring rotation with compute/comm
+overlap (paper §IV-C), depth-2 pipelined async ring (arXiv:1705.10633,
+DESIGN.md §7), synchronous all-gather baseline — by flipping one config
+field, and checks they reach the same RMSE (paper §V-B).
 """
 import os
 
@@ -27,8 +28,14 @@ def main():
     print(f"{S} devices; R: {coo.num_users} x {coo.num_movies}, {coo.nnz} ratings")
 
     rmses = {}
-    for name in ("sequential", "ring", "allgather"):
-        engine = BPMFEngine(cfg.replace(name=name))
+    variants = (
+        ("sequential", {}),
+        ("ring", {}),
+        ("ring_async", {"pipeline_depth": 2}),
+        ("allgather", {}),
+    )
+    for name, extra in variants:
+        engine = BPMFEngine(cfg.replace(name=name, **extra))
         engine.prepare(coo)
         if name == "ring":
             plan = engine.backend.plan
@@ -36,7 +43,7 @@ def main():
             print(f"LPT balance ratios (max/mean cost, 1.0=perfect): "
                   f"users={ratios[0]} movies={ratios[1]}")
         engine.fit()  # includes compile
-        timed = BPMFEngine(cfg.replace(name=name))
+        timed = BPMFEngine(cfg.replace(name=name, **extra))
         timed.prepare(coo)
         t0 = time.time()
         timed.fit()  # jit cache warm: measures the sweep loop itself

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Docstring-coverage gate for the ``repro.bpmf`` public surface.
+
+Walks every public module of the engine API (engine, backends, config,
+datasets) and fails if any public symbol — module, class, function, method
+or property defined in ``repro.bpmf`` — lacks a docstring. Inherited
+docstrings count (``inspect.getdoc`` follows the MRO), dunders and
+underscore-prefixed names are exempt.
+
+Run directly or via ``scripts/test.sh`` (which always includes it):
+
+    PYTHONPATH=src python scripts/check_docstrings.py
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+
+MODULES = (
+    "repro.bpmf",
+    "repro.bpmf.engine",
+    "repro.bpmf.backends",
+    "repro.bpmf.config",
+    "repro.bpmf.datasets",
+)
+
+
+def _public_members(obj) -> list[tuple[str, object]]:
+    return [
+        (name, member)
+        for name, member in vars(obj).items()
+        if not name.startswith("_")
+    ]
+
+
+def _missing_in_class(cls, prefix: str) -> list[str]:
+    missing = []
+    for name, member in _public_members(cls):
+        raw = inspect.unwrap(member) if callable(member) else member
+        if isinstance(member, property):
+            if not inspect.getdoc(member):
+                missing.append(f"{prefix}.{name} (property)")
+        elif inspect.isfunction(raw) or isinstance(member, (classmethod, staticmethod)):
+            if not inspect.getdoc(getattr(cls, name)):
+                missing.append(f"{prefix}.{name}()")
+    return missing
+
+
+def check(module_names=MODULES) -> list[str]:
+    """Return a list of fully-qualified public symbols missing docstrings."""
+    import importlib
+
+    missing: list[str] = []
+    for mod_name in module_names:
+        mod = importlib.import_module(mod_name)
+        if not inspect.getdoc(mod):
+            missing.append(mod_name + " (module)")
+        for name, member in _public_members(mod):
+            qual = f"{mod_name}.{name}"
+            if inspect.isclass(member) and member.__module__.startswith("repro.bpmf"):
+                if not inspect.getdoc(member):
+                    missing.append(qual + " (class)")
+                missing.extend(_missing_in_class(member, qual))
+            elif inspect.isfunction(member) and member.__module__.startswith("repro.bpmf"):
+                if not inspect.getdoc(member):
+                    missing.append(qual + "()")
+    return sorted(set(missing))
+
+
+def main() -> int:
+    missing = check()
+    if missing:
+        print(f"docstring coverage FAILED: {len(missing)} public symbol(s) undocumented")
+        for sym in missing:
+            print(f"  - {sym}")
+        return 1
+    print("docstring coverage OK: all public repro.bpmf symbols documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

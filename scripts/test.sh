@@ -6,8 +6,12 @@
 # multidevice tests override the device count themselves
 # (tests/conftest.py strips and re-appends the flag).
 #
-#   scripts/test.sh               # full tier-1 suite
+#   scripts/test.sh                     # full tier-1 suite
 #   scripts/test.sh tests/test_engine.py -k parity
+#   scripts/test.sh --bench-smoke       # + 2-sweep ring_async CLI smoke run
+#
+# Always runs the public-API docstring-coverage gate
+# (scripts/check_docstrings.py) before pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,4 +20,23 @@ if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
 fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-exec python -m pytest -x -q "$@"
+BENCH_SMOKE=0
+ARGS=()
+for a in "$@"; do
+  if [[ "$a" == "--bench-smoke" ]]; then
+    BENCH_SMOKE=1
+  else
+    ARGS+=("$a")
+  fi
+done
+
+python scripts/check_docstrings.py
+
+if [[ "$BENCH_SMOKE" == 1 ]]; then
+  echo "== bench smoke: 2-sweep ring_async on synthetic =="
+  python -m repro.launch.bpmf --backend ring_async --dataset synthetic \
+    --pipeline-depth 2 --sweeps 2 --burn-in 1 --K 4 \
+    --users 80 --movies 40 --nnz 800
+fi
+
+exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

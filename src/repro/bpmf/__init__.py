@@ -1,12 +1,14 @@
 """``repro.bpmf`` — the unified BPMF engine API.
 
-One facade (:class:`BPMFEngine`) over the sequential, ring and allgather
-samplers; backend choice is a :class:`BackendConfig` knob, not an import
-decision. See DESIGN.md for the architecture (facade -> backend registry ->
+One facade (:class:`BPMFEngine`) over the sequential, ring, ring_async
+(depth-d pipelined) and allgather samplers; backend choice is a
+:class:`BackendConfig` knob, not an import decision. See README.md for a
+quickstart, DESIGN.md for the architecture (facade -> backend registry ->
 ``repro.core``) and ``python -m repro.launch.bpmf --help`` for the CLI.
 """
 from repro.bpmf.backends import (
     Backend,
+    DistributedBackend,
     available_backends,
     get_backend,
     register_backend,
@@ -18,6 +20,7 @@ from repro.bpmf.engine import BPMFEngine
 __all__ = [
     "Backend",
     "BackendConfig",
+    "DistributedBackend",
     "BPMFConfig",
     "BPMFEngine",
     "ModelConfig",

@@ -12,6 +12,8 @@ Registered backends:
 
   * ``"sequential"`` — wraps :mod:`repro.core.gibbs` (single program)
   * ``"ring"``       — wraps :mod:`repro.core.distributed`, §IV-C overlap
+  * ``"ring_async"`` — same, with ``BackendConfig.pipeline_depth`` ring
+    rotations kept in flight (arXiv:1705.10633; DESIGN.md §7)
   * ``"allgather"``  — same, synchronous all-gather baseline
 """
 from __future__ import annotations
@@ -33,7 +35,32 @@ BACKENDS: dict[str, type["Backend"]] = {}
 
 
 def register_backend(name: str) -> Callable[[type["Backend"]], type["Backend"]]:
-    """Class decorator adding a backend under ``name`` (last wins)."""
+    """Class decorator adding a backend under ``name`` (last wins).
+
+    This is the extension point the ROADMAP's scaling PRs use instead of
+    new entry points: subclass :class:`Backend` (or, for shard_map-based
+    strategies, :class:`DistributedBackend`), register it, and it becomes
+    reachable from the engine, CLI and tests purely through
+    ``BackendConfig.name``::
+
+        from repro.bpmf import DistributedBackend, register_backend
+
+        @register_backend("ring_traced")
+        class TracedRingBackend(DistributedBackend):
+            def sweep(self, key, state, pred):
+                out = super().sweep(key, state, pred)
+                print("sweep done")
+                return out
+
+        BPMFEngine(BPMFConfig().replace(name="ring_traced")).fit(coo)
+
+    Args:
+        name: Registry key; re-registering an existing name replaces it.
+
+    Returns:
+        The class decorator; it sets ``cls.name`` and returns the class
+        unchanged.
+    """
 
     def deco(cls: type["Backend"]) -> type["Backend"]:
         cls.name = name
@@ -44,6 +71,17 @@ def register_backend(name: str) -> Callable[[type["Backend"]], type["Backend"]]:
 
 
 def get_backend(cfg: BPMFConfig) -> "Backend":
+    """Instantiate the backend named by ``cfg.backend.name``.
+
+    Args:
+        cfg: Full engine config; the new backend keeps a reference.
+
+    Returns:
+        An unprepared :class:`Backend` instance.
+
+    Raises:
+        ValueError: If the name is not in the registry.
+    """
     name = cfg.backend.name
     if name not in BACKENDS:
         raise ValueError(f"unknown backend {name!r}; available: {sorted(BACKENDS)}")
@@ -51,6 +89,7 @@ def get_backend(cfg: BPMFConfig) -> "Backend":
 
 
 def available_backends() -> list[str]:
+    """Sorted registry names (``["allgather", "ring", "ring_async", ...]``)."""
     return sorted(BACKENDS)
 
 
@@ -91,30 +130,32 @@ class Backend(abc.ABC):
     # ------------------------------------------------------------------
     @property
     def prepared(self) -> bool:
+        """Whether ``prepare()`` has built this backend's data layout."""
         return self._prepared
 
     def init_pred(self) -> PredictionState:
+        """Zeroed posterior-mean prediction accumulator for the test set."""
         return PredictionState.init(self.num_test)
 
     @property
     @abc.abstractmethod
     def num_test(self) -> int:
-        ...
+        """Number of held-out ratings."""
 
     @property
     @abc.abstractmethod
     def test_vals(self) -> jax.Array:
-        ...
+        """Held-out rating values, ``[num_test]`` f32 (uncentered)."""
 
     @property
     @abc.abstractmethod
     def mean_rating(self) -> float:
-        ...
+        """Training-set mean subtracted before sampling, re-added at predict."""
 
     @property
     @abc.abstractmethod
     def rating_range(self) -> tuple[float, float]:
-        ...
+        """(lo, hi) clip range for predictions."""
 
 
 # --------------------------------------------------------------------------
@@ -166,8 +207,15 @@ class SequentialBackend(Backend):
 # --------------------------------------------------------------------------
 
 
-class _DistributedBackend(Backend):
-    """Shared machinery for the shard_map backends (paper §IV)."""
+class DistributedBackend(Backend):
+    """Shared machinery for the shard_map backends (paper §IV).
+
+    Subclass this (and :func:`register_backend` the subclass) to add new
+    distributed execution strategies: it owns the mesh construction,
+    host-side data distribution, sharded init/sweep dispatch and factor
+    gathering; subclasses typically only pick a ``comm_mode`` via
+    ``BackendConfig.name`` or override :meth:`sweep`.
+    """
 
     def prepare(self, coo: RatingsCOO) -> None:
         devices = jax.devices()
@@ -218,12 +266,25 @@ class _DistributedBackend(Backend):
 
 
 @register_backend("ring")
-class RingBackend(_DistributedBackend):
+class RingBackend(DistributedBackend):
     """Paper §IV-C: ppermute rotation with compute/comm overlap."""
 
 
+@register_backend("ring_async")
+class AsyncRingBackend(DistributedBackend):
+    """Depth-d pipelined ring (arXiv:1705.10633; DESIGN.md §7).
+
+    Keeps ``BackendConfig.pipeline_depth`` shard rotations in flight in a
+    rotating buffer queue instead of the synchronous ring's one, hiding up
+    to d link latencies per Gram step at a memory cost of d resident
+    opposite-shard buffers. Bit-identical samples to ``"ring"`` for every
+    depth (the rotation schedule changes *when* transfers are issued,
+    never the values each Gram step consumes).
+    """
+
+
 @register_backend("allgather")
-class AllGatherBackend(_DistributedBackend):
+class AllGatherBackend(DistributedBackend):
     """Synchronous baseline: blocking all-gather then local updates."""
 
 

@@ -27,7 +27,15 @@ from repro.core import types as core_types
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
-    """The BPMF model itself (paper §III): rank, noise and prior."""
+    """The BPMF model itself (paper §III): rank, noise and prior.
+
+    Attributes:
+        K: Latent rank of the factorization ``R ~ U @ V.T``.
+        alpha: Rating noise precision (likelihood ``N(r | u·v, 1/alpha)``).
+        beta0: Normal-Wishart prior strength on the factor means.
+        sample_dtype: dtype of the stored factor samples.
+        compute_dtype: dtype of the Gram contraction (bf16 on TPU).
+    """
 
     K: int = 32
     alpha: float = 2.0  # rating noise precision
@@ -38,7 +46,21 @@ class ModelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
-    """Schedule, data split and checkpoint policy for one fit."""
+    """Schedule, data split and checkpoint policy for one fit.
+
+    Attributes:
+        num_sweeps: Total Gibbs sweeps for :meth:`BPMFEngine.fit`.
+        burn_in: Sweeps discarded before the posterior-mean accumulator
+            starts averaging predictions.
+        seed: Seeds both the train/test split and the sampler key, so one
+            integer pins the whole run.
+        test_fraction: Held-out fraction for RMSE tracking.
+        checkpoint_dir: Where :meth:`BPMFEngine.save` writes; ``None``
+            disables checkpointing.
+        checkpoint_every: Sweeps between auto-saves; 0 = explicit
+            ``save()`` only.
+        keep_checkpoints: Retention window (older steps are pruned).
+    """
 
     num_sweeps: int = 50
     burn_in: int = 8
@@ -55,15 +77,42 @@ class BackendConfig:
 
     ``name`` picks an entry from the backend registry
     (:mod:`repro.bpmf.backends`): ``"sequential"`` (single-program oracle),
-    ``"ring"`` (paper §IV-C overlap schedule) or ``"allgather"``
+    ``"ring"`` (paper §IV-C overlap schedule), ``"ring_async"`` (depth-d
+    pipelined ring, arXiv:1705.10633 / DESIGN.md §7) or ``"allgather"``
     (synchronous baseline).
+
+    Attributes:
+        name: Backend registry key; see
+            :func:`repro.bpmf.available_backends`.
+        num_shards: Ring length for the distributed backends; 0 means one
+            shard per visible device. Ignored by ``"sequential"``.
+        pipeline_depth: ``ring_async`` only — number of shard rotations
+            kept in flight (d >= 1). d=1 reproduces the ``"ring"``
+            schedule; larger d hides more link latency at the cost of d
+            resident opposite-shard buffers per device. Clamped to the
+            ring length; samples are bit-identical for every d.
+        use_pallas: Route the Gram contraction through the Pallas kernel
+            (TPU, or interpret mode on CPU).
+        bucket_pads: Neighbor-count pad classes for the dense bucketed
+            layout (``data/sparse.py``); items bucket into the smallest
+            pad >= their rating count.
+        partition_strategy: Cost-model load balancing of items onto
+            shards (paper §IV-B): ``"lpt"`` (longest-processing-time) or
+            ``"block"`` (contiguous).
     """
 
     name: str = "sequential"
     num_shards: int = 0  # 0 = one shard per visible device (distributed only)
+    pipeline_depth: int = 1  # ring_async: rotations in flight (d >= 1)
     use_pallas: bool = False  # route Gram terms through the Pallas kernel
     bucket_pads: tuple[int, ...] = (8, 32, 128, 512, 2048)
     partition_strategy: str = "lpt"  # cost-model balancing (paper §IV-B)
+
+    def __post_init__(self) -> None:
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"BackendConfig.pipeline_depth must be >= 1, got {self.pipeline_depth}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,8 +124,17 @@ class BPMFConfig:
     backend: BackendConfig = BackendConfig()
 
     def core(self) -> core_types.BPMFConfig:
-        """Lower to the legacy flat (hashable) config used by the kernels."""
-        comm_mode = self.backend.name if self.backend.name in ("ring", "allgather") else "ring"
+        """Lower to the legacy flat (hashable) config used by the kernels.
+
+        Returns:
+            A :class:`repro.core.types.BPMFConfig` suitable as a jit
+            static argument. Backend names that are also core comm modes
+            (``ring`` / ``ring_async`` / ``allgather``) pass through as
+            ``comm_mode``; anything else (e.g. ``sequential``) lowers to
+            ``"ring"``, which the sequential sampler ignores.
+        """
+        comm_modes = ("ring", "ring_async", "allgather")
+        comm_mode = self.backend.name if self.backend.name in comm_modes else "ring"
         return core_types.BPMFConfig(
             K=self.model.K,
             alpha=self.model.alpha,
@@ -85,6 +143,7 @@ class BPMFConfig:
             beta0=self.model.beta0,
             bucket_pads=tuple(self.backend.bucket_pads),
             comm_mode=comm_mode,
+            pipeline_depth=self.backend.pipeline_depth,
             sample_dtype=self.model.sample_dtype,
             compute_dtype=self.model.compute_dtype,
             use_pallas=self.backend.use_pallas,
@@ -94,8 +153,18 @@ class BPMFConfig:
         """`dataclasses.replace` that also reaches one level down.
 
         Keys matching a sub-config field are routed there, so
-        ``cfg.replace(name="ring", num_sweeps=10)`` works without spelling
-        out the nesting.
+        ``cfg.replace(name="ring_async", pipeline_depth=2, num_sweeps=10)``
+        works without spelling out the nesting.
+
+        Args:
+            **kw: Field overrides; each key must name a ``BPMFConfig``
+                field or a field of exactly one sub-config.
+
+        Returns:
+            A new :class:`BPMFConfig` with the overrides applied.
+
+        Raises:
+            TypeError: If a key matches no field anywhere.
         """
         subs = {"model": self.model, "run": self.run, "backend": self.backend}
         updates: dict[str, dict[str, Any]] = {k: {} for k in subs}

@@ -20,6 +20,16 @@ DATASETS: dict[str, Callable[..., RatingsCOO]] = {}
 
 
 def register_dataset(name: str) -> Callable[[Callable[..., RatingsCOO]], Callable[..., RatingsCOO]]:
+    """Function decorator adding a loader under ``name`` (last wins).
+
+    Args:
+        name: Registry key used by :func:`load_dataset` and the CLI's
+            ``--dataset`` flag.
+
+    Returns:
+        The decorator; it registers the loader and returns it unchanged.
+    """
+
     def deco(fn: Callable[..., RatingsCOO]) -> Callable[..., RatingsCOO]:
         DATASETS[name] = fn
         return fn
@@ -28,13 +38,26 @@ def register_dataset(name: str) -> Callable[[Callable[..., RatingsCOO]], Callabl
 
 
 def load_dataset(name: str, **kw) -> RatingsCOO:
-    """Load a registered dataset by name; kwargs go to its loader."""
+    """Load a registered dataset by name.
+
+    Args:
+        name: Registry key (see :func:`available_datasets`).
+        **kw: Forwarded to the loader (e.g. ``path=``, or the synthetic
+            generator's ``num_users`` / ``num_movies`` / ``nnz``).
+
+    Returns:
+        The raw ratings; the engine owns the train/test split.
+
+    Raises:
+        ValueError: If ``name`` is not registered.
+    """
     if name not in DATASETS:
         raise ValueError(f"unknown dataset {name!r}; available: {sorted(DATASETS)}")
     return DATASETS[name](**kw)
 
 
 def available_datasets() -> list[str]:
+    """Sorted registry names (``["chembl", "movielens", "synthetic", ...]``)."""
     return sorted(DATASETS)
 
 

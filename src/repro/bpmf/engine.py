@@ -1,7 +1,8 @@
 """``BPMFEngine`` — the single front door to every BPMF sampler.
 
-One facade over the sequential oracle and the distributed ring/allgather
-samplers (paper §V-B: they are the same sampler), with the run loop,
+One facade over the sequential oracle and the distributed
+ring/ring_async/allgather samplers (paper §V-B: they are the same
+sampler), with the run loop,
 sweep-level checkpointing and metric streaming factored out of the
 backends::
 
@@ -13,8 +14,9 @@ backends::
     print(engine.rmse)
 
 Backend choice is config-only: the same ``(seed, data)`` run through
-``"sequential"``, ``"ring"`` and ``"allgather"`` yields the same posterior
-samples up to float reduction order (tests/test_engine.py asserts this).
+``"sequential"``, ``"ring"``, ``"ring_async"`` (any depth) and
+``"allgather"`` yields the same posterior samples up to float reduction
+order (tests/test_engine.py asserts this).
 
 Determinism note: the sampler key is derived from ``RunConfig.seed`` and
 per-sweep keys from ``(key, state.sweep)``, so a run restored from a
@@ -38,6 +40,12 @@ class BPMFEngine:
     """Fit / sample / predict / save / restore over a pluggable backend."""
 
     def __init__(self, cfg: BPMFConfig | None = None):
+        """Build an engine (and its backend) from a config.
+
+        Args:
+            cfg: Full engine config; ``None`` means all defaults
+                (sequential backend, synthetic-friendly schedule).
+        """
         self.cfg = cfg or BPMFConfig()
         self.backend: Backend = get_backend(self.cfg)
         self.history: list[SweepMetrics] = []
@@ -58,6 +66,12 @@ class BPMFEngine:
         Re-passing the same dataset is a no-op; passing a *different* one
         (detected by shape/nnz) raises — an engine is bound to one dataset
         for its lifetime, so metrics and checkpoints stay coherent.
+
+        Args:
+            data: Raw ratings; the backend owns split/center/bucket/shard.
+
+        Returns:
+            ``self``, prepared.
         """
         fingerprint = (data.num_users, data.num_movies, data.nnz)
         if self.backend.prepared:
@@ -99,6 +113,13 @@ class BPMFEngine:
         Resumable: after ``restore()`` the iterator continues where the
         checkpoint left off, drawing the same randomness an uninterrupted
         run would have.
+
+        Args:
+            data: Ratings to ``prepare()`` first, if not already prepared.
+
+        Yields:
+            One :class:`SweepMetrics` (sample / posterior-mean RMSE,
+            sweep index) per completed sweep, as host floats.
         """
         if data is not None:
             self.prepare(data)
@@ -116,10 +137,15 @@ class BPMFEngine:
             yield metrics
 
     def fit(self, data: RatingsCOO | None = None, resume: bool = False) -> "BPMFEngine":
-        """Run (or finish) all sweeps; returns self.
+        """Run (or finish) all sweeps.
 
-        ``resume=True`` restores the latest checkpoint from
-        ``RunConfig.checkpoint_dir`` (if any) before continuing.
+        Args:
+            data: Ratings to ``prepare()`` first, if not already prepared.
+            resume: Restore the latest checkpoint from
+                ``RunConfig.checkpoint_dir`` (if any) before continuing.
+
+        Returns:
+            ``self``, with ``history`` / ``rmse`` / ``factors()`` populated.
         """
         if data is not None:
             self.prepare(data)
@@ -141,10 +167,12 @@ class BPMFEngine:
 
     @property
     def num_sweeps_done(self) -> int:
+        """Completed sweeps (``restore()`` positions this at the checkpoint step)."""
         return self._sweeps_done
 
     @property
     def state(self):
+        """Backend-specific Gibbs state pytree (``None`` before the first sweep)."""
         return self._state
 
     def factors(self) -> tuple[np.ndarray, np.ndarray]:
@@ -157,6 +185,13 @@ class BPMFEngine:
 
         Uses the current posterior sample's factors; for posterior-mean
         test-set predictions use the streamed ``rmse_avg`` metrics.
+
+        Args:
+            rows: ``[N]`` user ids (original numbering).
+            cols: ``[N]`` movie ids (original numbering).
+
+        Returns:
+            ``[N]`` predicted ratings, clipped to the training range.
         """
         U, V = self.factors()
         lo, hi = self.backend.rating_range
@@ -167,8 +202,15 @@ class BPMFEngine:
     # checkpointing (sweep-level save / resume)
     # ------------------------------------------------------------------
     def save(self, step: int | None = None) -> int:
-        """Checkpoint state, prediction accumulator and metric history at
-        ``step`` (default: current sweep)."""
+        """Checkpoint state, prediction accumulator and metric history.
+
+        Args:
+            step: Sweep count to label the checkpoint with (default: the
+                current sweep).
+
+        Returns:
+            The step the checkpoint was written at.
+        """
         self._ensure_state()
         step = self._sweeps_done if step is None else step
         hist = np.asarray(
@@ -187,6 +229,16 @@ class BPMFEngine:
         ``prepare`` first) so the restore target has the right shapes.
         Metric history up to the checkpointed sweep is restored too, so
         ``rmse`` and ``history`` are complete even in a fresh process.
+
+        Args:
+            data: Ratings to ``prepare()`` first, if not already prepared.
+            step: Checkpoint step to load (default: latest).
+
+        Returns:
+            The restored sweep count.
+
+        Raises:
+            FileNotFoundError: If no checkpoint exists at ``step``.
         """
         if data is not None:
             self.prepare(data)

@@ -12,6 +12,10 @@ using buffered MPI_Isend/Irecv. The TPU-native mapping (DESIGN.md §2, §4):
                         current shard's Gram contribution computes (the
                         permute for step t+1 is issued before step t's
                         compute so XLA's scheduler overlaps ICI and MXU)
+  * deep pipelining  -> `comm_mode="ring_async"`: same rotation, but
+    (1705.10633)        `pipeline_depth` permutes kept in flight through a
+                        rotating buffer queue (prologue / steady-state /
+                        drain), hiding d link latencies per step
   * synchronous      -> `comm_mode="allgather"`: one all-gather of the full
     baseline            opposite factor, then local updates (GraphLab-like)
 
@@ -350,6 +354,59 @@ def _half_sweep_ring(
     return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
 
 
+def _half_sweep_ring_async(
+    key: jax.Array,
+    X_opp_loc: jax.Array,  # [cap_opp, K] this device's opposite-side shard
+    side: RingSide,  # LOCAL slices (leading S axis already split)
+    hyper: HyperParams,
+    cfg: BPMFConfig,
+    num_shards: int,
+) -> jax.Array:
+    """Depth-d pipelined ring (Vander Aa et al. 1705.10633, DESIGN.md §7).
+
+    Generalizes :func:`_half_sweep_ring` from one in-flight ``ppermute`` to a
+    rotating queue of ``d = cfg.pipeline_depth`` buffers:
+
+      * prologue — issue the rotations for steps 1..d-1 before the first
+        Gram accumulation, so d shard buffers are live up front;
+      * steady state — at step t, issue the rotation producing the buffer
+        for step t+d, then accumulate step t from the queue head. Compute
+        at step t therefore only waits on a transfer issued d steps
+        earlier, hiding up to d link latencies instead of one;
+      * drain — the last d steps issue nothing and consume the queue.
+
+    Exactly ``num_shards - 1`` rotations are issued in total (same bytes as
+    the synchronous ring), and the buffer consumed at step t holds shard
+    ``(d_axis - t) mod S`` regardless of depth — rotations only reorder
+    *when* transfers are issued, never the values — so the posterior draw
+    is bit-identical to ``comm_mode="ring"`` for every depth. Memory cost:
+    d opposite-shard buffers (d × cap_opp × K × itemsize bytes) live at
+    once.
+    """
+    cap = side.cap
+    K = X_opp_loc.shape[-1]
+    G = jnp.zeros((cap, K, K), jnp.float32)
+    g = jnp.zeros((cap, K), jnp.float32)
+
+    if cfg.pipeline_depth < 1:
+        raise ValueError(f"pipeline_depth must be >= 1, got {cfg.pipeline_depth}")
+    depth = min(cfg.pipeline_depth, num_shards)  # > S-1 rotations can't exist
+
+    perm = [(i, (i + 1) % num_shards) for i in range(num_shards)]
+    queue = [X_opp_loc]  # queue[i] holds the buffer for step t + i
+    for _ in range(depth - 1):  # prologue: pre-issue d-1 rotations
+        queue.append(jax.lax.ppermute(queue[-1], RING_AXIS, perm))
+    for t in range(num_shards):
+        if t + depth < num_shards:  # issue step t+d while accumulating step t
+            queue.append(jax.lax.ppermute(queue[-1], RING_AXIS, perm))
+        buf = queue.pop(0)
+        G, g = _accumulate_buckets(
+            G, g, buf, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.use_pallas
+        )
+
+    return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
+
+
 def _half_sweep_allgather(
     key: jax.Array,
     X_opp_loc: jax.Array,
@@ -438,7 +495,16 @@ def _sweep_device_fn(
     S = data.num_shards
     prior = cfg.prior()
     k_hv, k_v, k_hu, k_u = sweep_keys(key, sweep)
-    half = _half_sweep_ring if cfg.comm_mode == "ring" else _half_sweep_allgather
+    halves = {
+        "ring": _half_sweep_ring,
+        "ring_async": _half_sweep_ring_async,
+        "allgather": _half_sweep_allgather,
+    }
+    if cfg.comm_mode not in halves:
+        raise ValueError(
+            f"unknown comm_mode {cfg.comm_mode!r}; one of {sorted(halves)}"
+        )
+    half = halves[cfg.comm_mode]
 
     # movies given users
     hyper_V = _sample_hyper_dist(k_hv, V_loc, data.movies.orig_ids, prior)

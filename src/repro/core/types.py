@@ -145,7 +145,10 @@ class BPMFConfig:
     # bucketing: pad sizes tried in order; items with nnz > last go to chunked path
     bucket_pads: Sequence[int] = (8, 32, 128, 512, 2048)
     # distributed
-    comm_mode: str = "ring"  # "ring" (paper async) | "allgather" (sync baseline)
+    # "ring" (paper async, 1 step in flight) | "allgather" (sync baseline)
+    # | "ring_async" (pipelined ring, `pipeline_depth` steps in flight)
+    comm_mode: str = "ring"
+    pipeline_depth: int = 1  # ring_async only: ppermutes in flight (d >= 1)
     sample_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.float32  # contraction dtype (bf16 on TPU)
     use_pallas: bool = False  # route gram through the Pallas kernel (TPU / interpret)

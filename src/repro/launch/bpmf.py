@@ -26,7 +26,7 @@ def build_parser() -> argparse.ArgumentParser:
         description="Run BPMF Gibbs sampling through the repro.bpmf engine facade.",
     )
     p.add_argument("--backend", default="sequential",
-                   help="sequential | ring | allgather (registry name)")
+                   help="sequential | ring | ring_async | allgather (registry name)")
     p.add_argument("--dataset", default="synthetic",
                    help="synthetic | movielens | chembl (registry name)")
     p.add_argument("--dataset-path", default=None, help="file for movielens/chembl loaders")
@@ -40,6 +40,8 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0, help="split + sampler seed")
     p.add_argument("--num-shards", type=int, default=0,
                    help="distributed shard count (0 = all visible devices)")
+    p.add_argument("--pipeline-depth", type=int, default=1,
+                   help="ring_async: ring rotations kept in flight (d >= 1)")
     p.add_argument("--devices", type=int, default=0,
                    help="force N host (CPU) devices before jax init")
     p.add_argument("--use-pallas", action="store_true",
@@ -83,6 +85,7 @@ def main(argv: list[str] | None = None) -> int:
     cfg = BPMFConfig().replace(
         name=args.backend,
         num_shards=args.num_shards,
+        pipeline_depth=args.pipeline_depth,
         use_pallas=args.use_pallas,
         K=args.K,
         alpha=args.alpha,

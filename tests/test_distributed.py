@@ -101,6 +101,45 @@ print("DU", float(du)); print("DV", float(dv))
 """
 
 
+RING_ASYNC_BITWISE_CODE = """
+import jax, numpy as np
+from repro.core.types import BPMFConfig
+from repro.core.distributed import (
+    build_distributed_data, make_ring_mesh, run_distributed, gather_factors,
+)
+from repro.data.synthetic import small_test_ratings
+
+coo, _ = small_test_ratings(num_users=120, num_movies=45, nnz=1080, true_rank=4, seed=3)
+key = jax.random.PRNGKey(7)
+mesh = make_ring_mesh()
+ddata, plan = build_distributed_data(coo, 8, pads=(8, 32, 128), seed=0)
+base = dict(K=8, num_sweeps=3, burn_in=1, bucket_pads=(8, 32, 128))
+st, _, _ = run_distributed(key, ddata, BPMFConfig(comm_mode="ring", **base), mesh)
+U0, V0 = gather_factors(st, plan)
+for d in (1, 2, 4):
+    cfg = BPMFConfig(comm_mode="ring_async", pipeline_depth=d, **base)
+    st, _, _ = run_distributed(key, ddata, cfg, mesh)
+    U, V = gather_factors(st, plan)
+    err = float(np.max(np.abs(U - U0))) + float(np.max(np.abs(V - V0)))
+    print("DEPTH%d" % d, err)
+"""
+
+
+@pytest.mark.multidevice
+def test_ring_async_bitwise_vs_ring():
+    """DESIGN.md §7: the pipelined ring draws *bit-identical* samples to the
+    synchronous ring at every depth, on a real 8-device mesh."""
+    out = run_with_devices(RING_ASYNC_BITWISE_CODE, num_devices=8, timeout=900)
+    vals = {
+        p[0]: float(p[1])
+        for p in (l.split() for l in out.splitlines())
+        if len(p) == 2 and p[0].startswith("DEPTH")
+    }
+    assert set(vals) == {"DEPTH1", "DEPTH2", "DEPTH4"}, out
+    for k, v in vals.items():
+        assert v == 0.0, (k, v)  # exact equality, not a tolerance
+
+
 @pytest.mark.multidevice
 def test_ring_equals_allgather():
     out = run_with_devices(RING_VS_ALLGATHER_CODE, num_devices=4)

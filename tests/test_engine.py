@@ -42,7 +42,7 @@ def _small_coo(seed: int = 3) -> RatingsCOO:
 
 
 def test_backend_registry():
-    assert {"sequential", "ring", "allgather"} <= set(available_backends())
+    assert {"sequential", "ring", "ring_async", "allgather"} <= set(available_backends())
     with pytest.raises(ValueError, match="unknown backend"):
         BPMFEngine(BPMFConfig().replace(name="mpi"))
 
@@ -72,6 +72,15 @@ def test_config_lowers_to_core():
     hash(core)  # must stay hashable for jit static args
 
 
+def test_config_lowers_pipeline_depth():
+    cfg = _small_cfg(name="ring_async", pipeline_depth=3)
+    core = cfg.core()
+    assert core.comm_mode == "ring_async" and core.pipeline_depth == 3
+    hash(core)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        _small_cfg(name="ring_async", pipeline_depth=0)
+
+
 # ---------- cross-backend parity (the paper's §V-B claim, facade-level) ----------
 
 
@@ -97,32 +106,54 @@ from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
 coo = load_dataset("synthetic", num_users=120, num_movies=45, nnz=1080,
                    noise_std=0.3, seed=3)
 cfg = BPMFConfig().replace(K=8, num_sweeps=4, burn_in=1, bucket_pads=(8, 32, 128))
+variants = [("SEQUENTIAL", dict(name="sequential")),
+            ("RING", dict(name="ring")),
+            ("ALLGATHER", dict(name="allgather"))]
+variants += [("RINGASYNC%d" % d, dict(name="ring_async", pipeline_depth=d))
+             for d in (1, 2, 4)]
 out = {}
-for name in ("sequential", "ring", "allgather"):
-    e = BPMFEngine(cfg.replace(name=name)).fit(coo)
-    out[name] = (e.factors(), e.rmse)
-for name in ("ring", "allgather"):
-    (U, V), r = out[name]
-    (U0, V0), r0 = out["sequential"]
-    print(name.upper() + "_ERRU", float(np.max(np.abs(U - U0))))
-    print(name.upper() + "_ERRV", float(np.max(np.abs(V - V0))))
-    print(name.upper() + "_DRMSE", abs(r - r0))
+for label, kw in variants:
+    e = BPMFEngine(cfg.replace(**kw)).fit(coo)
+    out[label] = (e.factors(), e.rmse)
+(U0, V0), r0 = out["SEQUENTIAL"]
+for label, ((U, V), r) in out.items():
+    if label == "SEQUENTIAL":
+        continue
+    print(label + "_ERRU", float(np.max(np.abs(U - U0))))
+    print(label + "_ERRV", float(np.max(np.abs(V - V0))))
+    print(label + "_DRMSE", abs(r - r0))
 """
 
 
 @pytest.mark.multidevice
 def test_cross_backend_parity_multidevice():
-    """Facade parity with the distributed backends on a real 4-device mesh."""
-    out = run_with_devices(ENGINE_PARITY_CODE, num_devices=4)
+    """Facade parity with the distributed backends on a real 4-device mesh,
+    including ring_async at pipeline_depth 1/2/4."""
+    out = run_with_devices(ENGINE_PARITY_CODE, num_devices=4, timeout=900)
     vals = {}
     for line in out.splitlines():
         parts = line.split()
         if len(parts) == 2 and ("ERR" in parts[0] or "DRMSE" in parts[0]):
             vals[parts[0]] = float(parts[1])
     assert vals, out
+    assert any(k.startswith("RINGASYNC4") for k in vals), vals
     for k, v in vals.items():
         tol = 1e-3 if "DRMSE" in k else 2e-3
         assert v < tol, (k, v, vals)
+
+
+def test_ring_async_depths_bitwise_parity_in_process():
+    """ring_async must equal ring *exactly* for every depth (DESIGN.md §7):
+    pipelining reorders transfer issue times, never the accumulated values."""
+    coo = _small_coo()
+    ref = BPMFEngine(_small_cfg(name="ring")).fit(coo)
+    U0, V0 = ref.factors()
+    for depth in (1, 2, 4):
+        e = BPMFEngine(_small_cfg(name="ring_async", pipeline_depth=depth)).fit(coo)
+        U, V = e.factors()
+        np.testing.assert_array_equal(U, U0, err_msg=f"depth={depth}")
+        np.testing.assert_array_equal(V, V0, err_msg=f"depth={depth}")
+        assert [m.rmse_avg for m in e.history] == [m.rmse_avg for m in ref.history]
 
 
 def test_legacy_run_wrapper_matches_engine():
@@ -144,11 +175,19 @@ def test_legacy_run_wrapper_matches_engine():
 # ---------- checkpoint round-trip ----------
 
 
-@pytest.mark.parametrize("name", ["sequential", "ring"])
+@pytest.mark.parametrize("name", ["sequential", "ring", "ring_async"])
 def test_checkpoint_roundtrip_resumes_identically(tmp_path, name):
-    """save() mid-run -> restore() in a fresh engine -> identical metrics."""
+    """save() mid-run -> restore() in a fresh engine -> identical metrics.
+
+    For ring_async (depth 2) this is the mid-sweep resume the pipelined
+    schedule must survive: the queue is rebuilt from the restored factor
+    shards, so no in-flight buffer state needs checkpointing.
+    """
     coo = _small_coo(seed=5)
-    cfg = _small_cfg(name=name, num_sweeps=6, checkpoint_dir=str(tmp_path / name))
+    extra = {"pipeline_depth": 2} if name == "ring_async" else {}
+    cfg = _small_cfg(
+        name=name, num_sweeps=6, checkpoint_dir=str(tmp_path / name), **extra
+    )
 
     full = BPMFEngine(cfg).fit(coo)
 
