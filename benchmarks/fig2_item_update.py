@@ -1,4 +1,4 @@
-"""Paper Figure 2: time to update one item vs number of ratings.
+"""Paper Figure 2 — the cost-model fit — and the Gram autotune driver.
 
 Paper methods -> this repo (TPU/SPMD adaptation, DESIGN.md §2):
   * sequential rank-one update  -> per-item naive update (posterior.update_item_naive)
@@ -9,19 +9,53 @@ Paper methods -> this repo (TPU/SPMD adaptation, DESIGN.md §2):
                                    item across threads)
 
 The fitted (fixed, per_rating) cost model parameterizes core/balance.py —
-the same Figure-2-driven methodology the paper uses for load balancing.
+the same Figure-2-driven methodology the paper uses for load balancing —
+and, since the autotuned hot path landed, also the deterministic heuristic
+in ``repro.kernels.autotune`` (the regression that weighs partitioning
+steers kernel choice too).
+
+This script is additionally the **autotune driver** (ISSUE 3): for every
+step shape in ``STEP_SHAPES`` it measures
+``(tb, pc) × {pallas_fused, pallas, xla}`` through the real dispatch path
+(``autotune.measure_step``), records the winners into the persistent cache
+under ``experiments/autotune/`` and writes the per-shape timings to
+``experiments/bench/fig2_item_update.json`` (schema:
+``experiments/bench/README.md``). ``--smoke`` measures only the first two
+shapes with a tiny budget and *merges* into an existing artifact instead of
+shrinking it.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import OUT_DIR, save_result
 from repro.core import posterior
 from repro.core.balance import fit_cost_model
 from repro.core.types import Bucket, HyperParams
+from repro.kernels import autotune
 from repro.utils import timeit
+
+# (name, per-bucket (B, P) shapes, Ns, K) — one entry per autotuned step
+# shape. The first two are the bench-smoke shapes: K=32 multi-bucket steps
+# where the fused kernel's single launch + in-kernel scatter beats the
+# per-bucket dispatch + two XLA `at[].add` per bucket (whose cost scales
+# with B·K²) even in interpret mode.
+STEP_SHAPES: list[tuple[str, list[tuple[int, int]], int, int]] = [
+    ("multi_med", [(48, 64), (16, 32)], 128, 32),
+    ("multi_wide", [(32, 128), (16, 64)], 192, 32),
+    ("multi_small", [(32, 32), (16, 128)], 128, 16),
+    ("one_tall", [(64, 32)], 256, 32),
+    ("one_wide", [(8, 512)], 512, 32),
+    ("many_tiny", [(128, 8)], 128, 16),
+    ("two_big", [(16, 128), (16, 128)], 1024, 32),
+    ("small_rank", [(64, 64)], 512, 8),
+]
 
 
 def _bucket_for(nnz: int, num_items: int, num_opposite: int, K: int, seed: int = 0) -> Bucket:
@@ -38,7 +72,8 @@ def _bucket_for(nnz: int, num_items: int, num_opposite: int, K: int, seed: int =
     )
 
 
-def run(smoke: bool = False) -> dict:
+def _fig2_rows(smoke: bool) -> list[dict]:
+    """The paper's Fig 2 curves: per-item update time vs rating count."""
     K = 16 if smoke else 32
     num_opposite = 2_000
     nnz_grid = [8, 32, 128, 512] if smoke else [8, 16, 32, 64, 128, 256, 512, 1024, 2048]
@@ -52,14 +87,14 @@ def run(smoke: bool = False) -> dict:
         lambda nbr, val: posterior.update_item_naive(key, 0, nbr, val, X, hyper, 2.0)
     )
     upd1 = jax.jit(
-        lambda b: posterior.update_bucket(key, X_side1, X, b, hyper, 2.0, jnp.float32, False)
+        lambda b: posterior.update_bucket(key, X_side1, X, b, hyper, 2.0, jnp.float32, "xla")
     )
 
     rows: list[dict] = []
     B = 64
     X_sideB = jnp.zeros((B, K), jnp.float32)
     updB = jax.jit(
-        lambda b: posterior.update_bucket(key, X_sideB, X, b, hyper, 2.0, jnp.float32, False)
+        lambda b: posterior.update_bucket(key, X_sideB, X, b, hyper, 2.0, jnp.float32, "xla")
     )
     rng = np.random.default_rng(1)
     for nnz in nnz_grid:
@@ -70,21 +105,155 @@ def run(smoke: bool = False) -> dict:
         t_batch = timeit(updB, _bucket_for(nnz, B, num_opposite, K), iters=iters) / B
         rows.append({"nnz": nnz, "t_naive_s": t_naive, "t_single_chol_s": t_single,
                      "t_batched_per_item_s": t_batch})
+    return rows
 
+
+def _impl_of(label: str) -> str:
+    if label == "xla":
+        return "xla"
+    return "pallas_fused" if label.startswith("pallas_fused") else "pallas"
+
+
+def _sweep_entry(dec, timings: dict, bucket_shapes, Ns: int, K: int) -> dict:
+    """One JSON entry from a measure_step result (shared by both sweeps)."""
+    per_impl: dict[str, float] = {}
+    for label, t in timings.items():
+        impl = _impl_of(label)
+        per_impl[impl] = min(per_impl.get(impl, float("inf")), t)
+    entry = {
+        "buckets": [list(s) for s in bucket_shapes],
+        "Ns": Ns,
+        "K": K,
+        "timings_us": {k: round(v, 3) for k, v in per_impl.items()},
+        "winner": dec.impl,
+        "tb": dec.tb,
+        "pc": dec.pc,
+        "ns_chunk": dec.ns_chunk,
+    }
+    if "pallas" in per_impl and "pallas_fused" in per_impl:
+        entry["fused_vs_bucket_speedup"] = round(
+            per_impl["pallas"] / max(per_impl["pallas_fused"], 1e-9), 4
+        )
+    return entry
+
+
+def _kernel_sweep(smoke: bool) -> dict[str, dict]:
+    """Measured (tb, pc) x impl sweep per step shape, via the autotuner."""
+    shapes = STEP_SHAPES[:2] if smoke else STEP_SHAPES
+    tilings = [(8, 128)] if smoke else [(8, 128), (8, 256), (4, 512)]
+    # smoke's budget is tiny via its candidate count (2 shapes × 1 tiling vs
+    # 8 shapes × 3 tilings + workload keys); the extra per-candidate iters
+    # buy a stable interleaved median for the fused-vs-bucket comparison
+    iters = 48 if smoke else 16
+    sweep: dict[str, dict] = {}
+    for name, bucket_shapes, Ns, K in shapes:
+        dec, timings = autotune.measure_step(
+            bucket_shapes, Ns, K, iters=iters, tilings=tilings
+        )
+        sweep[name] = _sweep_entry(dec, timings, bucket_shapes, Ns, K)
+        print(f"  {name}: winner={dec.impl} timings_us={sweep[name]['timings_us']}")
+    return sweep
+
+
+WORKLOAD = dict(num_users=400, num_movies=300, nnz=12_000, seed=0)
+WORKLOAD_SHARDS = 4
+WORKLOAD_K = 16
+
+
+def _workload_sweep(smoke: bool, max_keys: int = 6) -> dict:
+    """Measure the *exact* step keys a real engine run will look up.
+
+    The synthetic ``STEP_SHAPES`` sweep characterizes the kernels; this one
+    makes the cache engage: it builds the reference workload's distributed
+    layout, derives each ring step's engine key via
+    ``autotune.workload_step_keys`` and records measured winners for those
+    keys, so ``gram_impl="auto"`` on this workload hits the cache at trace
+    time. Skipped in smoke mode (layout build + per-key compiles dominate).
+    """
+    if smoke:
+        return {}
+    from repro.bpmf import load_dataset
+    from repro.core.distributed import build_distributed_data
+
+    coo = load_dataset("synthetic", **WORKLOAD)
+    data, _ = build_distributed_data(coo, num_shards=WORKLOAD_SHARDS)
+    uniq: dict[str, tuple] = {}
+    for key, shapes in autotune.workload_step_keys(data, WORKLOAD_K):
+        uniq.setdefault(key.encode(), (key, shapes))
+    dropped = max(len(uniq) - max_keys, 0)
+    if dropped:
+        print(f"  workload sweep: measuring {max_keys} of {len(uniq)} distinct keys "
+              f"({dropped} dropped)")
+    entries: dict[str, dict] = {}
+    for enc, (key, shapes) in list(uniq.items())[:max_keys]:
+        dec, timings = autotune.measure_step(
+            shapes, key.Ns, key.K, cap=key.cap, iters=8, tilings=[(8, 128)]
+        )
+        entries[enc] = dict(_sweep_entry(dec, timings, shapes, key.Ns, key.K), cap=key.cap)
+        print(f"  {enc}: winner={dec.impl}")
+    return {
+        "workload": {**WORKLOAD, "num_shards": WORKLOAD_SHARDS, "K": WORKLOAD_K},
+        "distinct_keys": len(uniq),
+        "measured_keys": len(entries),
+        "entries": entries,
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    """Fig2 curves + cost-model fit + kernel autotune sweep; writes JSON."""
+    rows = _fig2_rows(smoke)
     nnzs = np.array([r["nnz"] for r in rows], dtype=np.float64)
     tb = np.array([r["t_batched_per_item_s"] for r in rows])
     cm = fit_cost_model(nnzs, tb * 1e6)  # microseconds => well-scaled coefficients
+
+    print(f"kernel sweep ({'smoke: 2' if smoke else len(STEP_SHAPES)} step shapes):")
+    sweep = _kernel_sweep(smoke)
+    workload = _workload_sweep(smoke)
+
     out = {
+        "device": jax.default_backend(),
         "rows": rows,
         "cost_model": {"fixed_us": cm.fixed, "per_rating_us": cm.per_rating},
         "batched_speedup_at_min_nnz": rows[0]["t_single_chol_s"] / max(rows[0]["t_batched_per_item_s"], 1e-12),
+        "kernel_sweep": sweep,
+        "workload_sweep": workload,
+        "autotune_cache": os.path.relpath(
+            autotune.get_cache().path, os.path.join(OUT_DIR, "..", "..")
+        ),
     }
+    if smoke:
+        # merge into an existing (fuller) artifact instead of shrinking it:
+        # keep its Fig-2 curves / cost model, update only re-measured entries
+        path = os.path.join(OUT_DIR, "fig2_item_update.json")
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            merged_sweep = dict(old.get("kernel_sweep", {}))
+            merged_sweep.update(sweep)
+            keep = {
+                k: old[k]
+                for k in ("rows", "cost_model", "batched_speedup_at_min_nnz",
+                          "workload_sweep")
+                if k in old
+            }
+            old.update(out)
+            old.update(keep)
+            old["kernel_sweep"] = merged_sweep
+            out = old
+        except (OSError, ValueError):
+            pass
     save_result("fig2_item_update", out)
     return out
 
 
 if __name__ == "__main__":
-    r = run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 shapes, tiny timing budget; merges into existing JSON")
+    args = ap.parse_args()
+    r = run(smoke=args.smoke)
     for row in r["rows"]:
         print({k: (f"{v:.2e}" if isinstance(v, float) else v) for k, v in row.items()})
     print("cost model:", r["cost_model"])
+    winners = {k: v["winner"] for k, v in r["kernel_sweep"].items()}
+    print("kernel winners:", winners)

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Validate experiments/bench JSON artifacts against the documented schema.
+
+Usage: ``python scripts/check_bench_schema.py <name> [<name> ...]`` where
+``<name>`` is an artifact basename (``fig2_item_update``, ``fig5_overlap``).
+Checks the structural invariants documented in ``experiments/bench/README.md``
+— required keys, entry shapes, value domains — and exits non-zero with a
+list of violations. ``scripts/test.sh --autotune-smoke`` runs it after the
+fig2 driver.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BENCH_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "experiments", "bench")
+
+IMPLS = ("pallas_fused", "pallas", "xla")
+
+
+def check_fig2_item_update(payload: dict) -> list[str]:
+    """Schema of fig2_item_update.json (cost-model fit + kernel sweep)."""
+    errs: list[str] = []
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errs.append("rows: missing or empty")
+    else:
+        for i, r in enumerate(rows):
+            for k in ("nnz", "t_naive_s", "t_single_chol_s", "t_batched_per_item_s"):
+                if not isinstance(r.get(k), (int, float)):
+                    errs.append(f"rows[{i}].{k}: missing or non-numeric")
+    cm = payload.get("cost_model")
+    if not isinstance(cm, dict) or not all(
+        isinstance(cm.get(k), (int, float)) for k in ("fixed_us", "per_rating_us")
+    ):
+        errs.append("cost_model: needs numeric fixed_us and per_rating_us")
+    if payload.get("device") not in ("cpu", "gpu", "tpu"):
+        errs.append(f"device: unexpected {payload.get('device')!r}")
+    sweep = payload.get("kernel_sweep")
+    if not isinstance(sweep, dict) or not sweep:
+        errs.append("kernel_sweep: missing or empty")
+        return errs
+    for name, e in sweep.items():
+        where = f"kernel_sweep[{name}]"
+        if e.get("winner") not in IMPLS:
+            errs.append(f"{where}.winner: {e.get('winner')!r} not in {IMPLS}")
+        t = e.get("timings_us")
+        if not isinstance(t, dict) or not set(IMPLS) <= set(t):
+            errs.append(f"{where}.timings_us: needs all of {IMPLS}")
+        elif any(not isinstance(t[k], (int, float)) or t[k] <= 0 for k in IMPLS):
+            errs.append(f"{where}.timings_us: non-positive or non-numeric entry")
+        if not isinstance(e.get("buckets"), list) or not e["buckets"]:
+            errs.append(f"{where}.buckets: missing or empty")
+        for k in ("Ns", "K"):
+            if not isinstance(e.get(k), int):
+                errs.append(f"{where}.{k}: missing or non-int")
+    ws = payload.get("workload_sweep")
+    if ws:  # optional: full runs only (smoke merges preserve an existing one)
+        for name, e in ws.get("entries", {}).items():
+            if e.get("winner") not in IMPLS:
+                errs.append(f"workload_sweep.entries[{name}].winner: {e.get('winner')!r}")
+            if not isinstance(e.get("cap"), int):
+                errs.append(f"workload_sweep.entries[{name}].cap: missing or non-int")
+    return errs
+
+
+def check_fig5_overlap(payload: dict) -> list[str]:
+    """Schema of fig5_overlap.json (overlap modes + parity flags)."""
+    errs: list[str] = []
+    modes = payload.get("modes")
+    if not isinstance(modes, dict) or not modes:
+        errs.append("modes: missing or empty")
+        return errs
+    for name, m in modes.items():
+        for k in ("seconds", "seconds_per_sweep", "rmse"):
+            if not isinstance(m.get(k), (int, float)):
+                errs.append(f"modes[{name}].{k}: missing or non-numeric")
+    if not isinstance(payload.get("parity_ok"), bool):
+        errs.append("parity_ok: missing or non-bool")
+    return errs
+
+
+CHECKERS = {
+    "fig2_item_update": check_fig2_item_update,
+    "fig5_overlap": check_fig5_overlap,
+}
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(f"usage: {sys.argv[0]} <artifact-name> [...]; known: {sorted(CHECKERS)}")
+        return 2
+    rc = 0
+    for name in argv:
+        if name not in CHECKERS:
+            print(f"{name}: no schema checker (known: {sorted(CHECKERS)})")
+            rc = 1
+            continue
+        path = os.path.normpath(os.path.join(BENCH_DIR, f"{name}.json"))
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"{name}: cannot load {path}: {e}")
+            rc = 1
+            continue
+        errs = CHECKERS[name](payload)
+        if errs:
+            print(f"{name}: schema FAILED ({len(errs)} violation(s))")
+            for e in errs:
+                print(f"  - {e}")
+            rc = 1
+        else:
+            print(f"{name}: schema OK ({path})")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -9,6 +9,9 @@
 #   scripts/test.sh                     # full tier-1 suite
 #   scripts/test.sh tests/test_engine.py -k parity
 #   scripts/test.sh --bench-smoke       # + 2-sweep ring_async CLI smoke run
+#   scripts/test.sh --autotune-smoke    # + fig2 autotune driver (2 shapes,
+#                                       #   tiny budget) + JSON schema check
+#                                       #   + use_pallas shim warns-once check
 #
 # Always runs the public-API docstring-coverage gate
 # (scripts/check_docstrings.py) before pytest.
@@ -21,10 +24,13 @@ fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
+AUTOTUNE_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
     BENCH_SMOKE=1
+  elif [[ "$a" == "--autotune-smoke" ]]; then
+    AUTOTUNE_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -37,6 +43,28 @@ if [[ "$BENCH_SMOKE" == 1 ]]; then
   python -m repro.launch.bpmf --backend ring_async --dataset synthetic \
     --pipeline-depth 2 --sweeps 2 --burn-in 1 --K 4 \
     --users 80 --movies 40 --nnz 800
+fi
+
+if [[ "$AUTOTUNE_SMOKE" == 1 ]]; then
+  echo "== autotune smoke: fig2 driver, 2 shapes, tiny budget =="
+  python -m benchmarks.fig2_item_update --smoke
+  python scripts/check_bench_schema.py fig2_item_update
+  echo "== use_pallas deprecation shim: must warn exactly once =="
+  # intentionally a fresh process (unlike the pytest variant, which has to
+  # monkeypatch the warn-once flag): checks the real once-per-process gate
+  python - <<'PY'
+import warnings
+from repro.bpmf.config import BackendConfig
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    a = BackendConfig(use_pallas=True)
+    b = BackendConfig(use_pallas=False)
+dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+       and "use_pallas" in str(x.message)]
+assert len(dep) == 1, f"expected exactly 1 use_pallas warning, got {len(dep)}"
+assert a.gram_impl == "pallas" and b.gram_impl == "xla", (a.gram_impl, b.gram_impl)
+print("use_pallas shim OK: warned once, mapped to gram_impl")
+PY
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

@@ -2,7 +2,7 @@
 
 The legacy ``repro.core.types.BPMFConfig`` mixed three concerns into one
 flat dataclass: what the model *is* (K, alpha, prior), how long to *run*
-(sweeps, burn-in) and *where/how* to execute (comm_mode, use_pallas).
+(sweeps, burn-in) and *where/how* to execute (comm_mode, gram_impl).
 The engine API separates them so that switching execution backends —
 sequential, ring, allgather, Pallas on or off — is a config knob with no
 model or schedule implications:
@@ -18,11 +18,29 @@ kernel-level code, which stays untouched.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax.numpy as jnp
 
 from repro.core import types as core_types
+
+_GRAM_IMPLS = ("auto", "pallas_fused", "pallas", "xla")
+_USE_PALLAS_WARNED = False
+
+
+def _warn_use_pallas_once() -> None:
+    """Emit the ``use_pallas`` deprecation warning exactly once per process."""
+    global _USE_PALLAS_WARNED
+    if not _USE_PALLAS_WARNED:
+        _USE_PALLAS_WARNED = True
+        warnings.warn(
+            "BackendConfig.use_pallas is deprecated; use gram_impl="
+            '"auto" | "pallas" | "xla" instead (use_pallas=True -> "pallas", '
+            'False -> "xla")',
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,8 +109,16 @@ class BackendConfig:
             schedule; larger d hides more link latency at the cost of d
             resident opposite-shard buffers per device. Clamped to the
             ring length; samples are bit-identical for every d.
-        use_pallas: Route the Gram contraction through the Pallas kernel
-            (TPU, or interpret mode on CPU).
+        gram_impl: Gram hot-path dispatch (DESIGN.md §8): ``"auto"``
+            (default — per-shape autotune cache, deterministic heuristic
+            fallback: Pallas where it wins on TPU, XLA on CPU),
+            ``"pallas"`` (force the per-bucket kernel), ``"xla"`` (force
+            the gather+einsum path). ``"pallas_fused"`` forces the fused
+            one-kernel-per-ring-step path (mainly tests/benchmarks —
+            ``"auto"`` selects it when profitable).
+        use_pallas: **Deprecated** boolean forerunner of ``gram_impl``;
+            passing it warns once and maps ``True -> "pallas"``,
+            ``False -> "xla"``.
         bucket_pads: Neighbor-count pad classes for the dense bucketed
             layout (``data/sparse.py``); items bucket into the smallest
             pad >= their rating count.
@@ -104,7 +130,8 @@ class BackendConfig:
     name: str = "sequential"
     num_shards: int = 0  # 0 = one shard per visible device (distributed only)
     pipeline_depth: int = 1  # ring_async: rotations in flight (d >= 1)
-    use_pallas: bool = False  # route Gram terms through the Pallas kernel
+    gram_impl: str = "auto"  # Gram dispatch: auto | pallas_fused | pallas | xla
+    use_pallas: bool | None = None  # deprecated: use gram_impl
     bucket_pads: tuple[int, ...] = (8, 32, 128, 512, 2048)
     partition_strategy: str = "lpt"  # cost-model balancing (paper §IV-B)
 
@@ -112,6 +139,24 @@ class BackendConfig:
         if self.pipeline_depth < 1:
             raise ValueError(
                 f"BackendConfig.pipeline_depth must be >= 1, got {self.pipeline_depth}"
+            )
+        if self.use_pallas is not None:
+            if self.gram_impl != "auto":
+                raise ValueError(
+                    f"BackendConfig: both gram_impl={self.gram_impl!r} and the "
+                    f"deprecated use_pallas={self.use_pallas} were given — drop "
+                    "use_pallas"
+                )
+            _warn_use_pallas_once()
+            object.__setattr__(self, "gram_impl", "pallas" if self.use_pallas else "xla")
+            # consume the legacy flag so later replace(gram_impl=...) calls
+            # are not silently clobbered by the retained boolean (and
+            # use_pallas=True == gram_impl="pallas" configs hash equal)
+            object.__setattr__(self, "use_pallas", None)
+        if self.gram_impl not in _GRAM_IMPLS:
+            raise ValueError(
+                f"BackendConfig.gram_impl must be one of {_GRAM_IMPLS}, "
+                f"got {self.gram_impl!r}"
             )
 
 
@@ -146,7 +191,7 @@ class BPMFConfig:
             pipeline_depth=self.backend.pipeline_depth,
             sample_dtype=self.model.sample_dtype,
             compute_dtype=self.model.compute_dtype,
-            use_pallas=self.backend.use_pallas,
+            gram_impl=self.backend.gram_impl,
         )
 
     def replace(self, **kw: Any) -> "BPMFConfig":

@@ -311,14 +311,21 @@ def _accumulate_buckets(
     buckets: tuple[Bucket, ...],
     alpha: float,
     compute_dtype,
-    use_pallas: bool,
+    gram_impl: str,
 ) -> tuple[jax.Array, jax.Array]:
-    """Add each bucket's Gram contribution into the per-local-item (G, g)."""
-    for b in buckets:
-        Gb, gb = posterior.gram_terms(X_src, b, alpha, compute_dtype, use_pallas)
-        G = G.at[b.item_ids].add(Gb, mode="drop")
-        g = g.at[b.item_ids].add(gb, mode="drop")
-    return G, g
+    """Add one ring step's Gram contributions into the per-local-item (G, g).
+
+    Dispatch is resolved at trace time by ``kernels.ops.bpmf_gram_step``:
+    with a fused decision (autotune cache / heuristic / explicit
+    ``gram_impl="pallas_fused"``) the whole step is one ``pallas_call``
+    scatter-accumulating in-kernel; otherwise it is the per-bucket loop
+    with ``at[].add`` scatters.
+    """
+    from repro.kernels import ops as kops
+
+    return kops.bpmf_gram_step(
+        G, g, X_src, buckets, alpha=alpha, compute_dtype=compute_dtype, gram_impl=gram_impl
+    )
 
 
 def _half_sweep_ring(
@@ -346,7 +353,7 @@ def _half_sweep_ring(
         if t + 1 < num_shards:
             nxt = jax.lax.ppermute(buf, RING_AXIS, perm)  # in flight during gram
         G, g = _accumulate_buckets(
-            G, g, buf, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.use_pallas
+            G, g, buf, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.gram_impl
         )
         if t + 1 < num_shards:
             buf = nxt
@@ -401,7 +408,7 @@ def _half_sweep_ring_async(
             queue.append(jax.lax.ppermute(queue[-1], RING_AXIS, perm))
         buf = queue.pop(0)
         G, g = _accumulate_buckets(
-            G, g, buf, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.use_pallas
+            G, g, buf, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.gram_impl
         )
 
     return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
@@ -432,7 +439,7 @@ def _half_sweep_allgather(
         o = (d - t) % num_shards
         shard = jax.lax.dynamic_slice(X_full, (o * cap_opp, 0), (cap_opp, K))
         G, g = _accumulate_buckets(
-            G, g, shard, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.use_pallas
+            G, g, shard, side.steps[t], cfg.alpha, cfg.compute_dtype, cfg.gram_impl
         )
     return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
 

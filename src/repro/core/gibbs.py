@@ -83,13 +83,13 @@ def gibbs_sweep(
     hyper_V = sample_hyper(k_hv, state.V, prior)
     V = posterior.update_side(
         k_v, state.V, state.U, data.movies, hyper_V, cfg.alpha,
-        cfg.compute_dtype, cfg.use_pallas,
+        cfg.compute_dtype, cfg.gram_impl,
     )
     # users given (updated) movies
     hyper_U = sample_hyper(k_hu, state.U, prior)
     U = posterior.update_side(
         k_u, state.U, V, data.users, hyper_U, cfg.alpha,
-        cfg.compute_dtype, cfg.use_pallas,
+        cfg.compute_dtype, cfg.gram_impl,
     )
 
     sweep = state.sweep + 1

@@ -36,30 +36,40 @@ def item_noise(key: jax.Array, item_ids: jax.Array, K: int, dtype=jnp.float32) -
     return jax.vmap(one)(item_ids)
 
 
+def _normalize_gram_impl(gram_impl) -> str:
+    """Accept the legacy ``use_pallas`` boolean in ``gram_impl`` position."""
+    if isinstance(gram_impl, bool):
+        return "pallas" if gram_impl else "xla"
+    return gram_impl
+
+
 def gram_terms(
     X_opp: jax.Array,
     bucket: Bucket,
     alpha: float,
     compute_dtype=jnp.float32,
-    use_pallas: bool = False,
+    gram_impl: str | bool = "xla",
 ) -> tuple[jax.Array, jax.Array]:
     """(G, g) with G = alpha * sum_j x_j x_j^T  [B,K,K], g = alpha * sum_j x_j r_j [B,K].
 
-    ``use_pallas`` routes the gather+Gram through the TPU kernel; the jnp path
-    is the reference implementation (and what the CPU dry-run compiles).
+    ``gram_impl`` selects the gather+Gram implementation — ``"auto"``
+    (autotune cache → heuristic), ``"pallas"`` or ``"xla"``; a legacy
+    boolean maps to pallas/xla. Every choice dispatches through
+    ``kernels.ops.bpmf_gram`` so there is exactly one implementation per
+    impl: the XLA path gathers the masked ``[B, P, K]`` neighbor block
+    once and contracts the augmented ``[Xn | val]`` block against itself
+    (``ops._bpmf_gram_xla``), the Pallas path is the one-hot MXU kernel.
     """
-    if use_pallas:
-        from repro.kernels import ops as kops
+    from repro.kernels import ops as kops
 
-        G, g = kops.bpmf_gram(X_opp, bucket.nbr, bucket.val, bucket.nnz, compute_dtype=compute_dtype)
-    else:
-        mask = bucket.mask()
-        Xn = jnp.take(X_opp, bucket.nbr, axis=0)  # [B, P, K]
-        Xn = (Xn * mask[..., None]).astype(compute_dtype)
-        G = jnp.einsum("bpk,bpl->bkl", Xn, Xn, preferred_element_type=jnp.float32)
-        g = jnp.einsum("bpk,bp->bk", Xn, bucket.val.astype(compute_dtype), preferred_element_type=jnp.float32)
+    gram_impl = _normalize_gram_impl(gram_impl)
+    G, g = kops.bpmf_gram(
+        X_opp, bucket.nbr, bucket.val, bucket.nnz,
+        compute_dtype=compute_dtype,
+        impl="pallas" if gram_impl == "pallas_fused" else gram_impl,
+    )
     a = jnp.asarray(alpha, jnp.float32)
-    return a * G.astype(jnp.float32), a * g.astype(jnp.float32)
+    return a * G, a * g
 
 
 def sample_from_terms(
@@ -90,14 +100,14 @@ def update_bucket(
     hyper: HyperParams,
     alpha: float,
     compute_dtype=jnp.float32,
-    use_pallas: bool = False,
+    gram_impl: str | bool = "xla",
 ) -> jax.Array:
     """Sample all items of one bucket and scatter them into X_side.
 
     Bucket rows with ``item_ids == -1`` are padding and dropped by the
     scatter (mode="drop").
     """
-    G, g = gram_terms(X_opp, bucket, alpha, compute_dtype, use_pallas)
+    G, g = gram_terms(X_opp, bucket, alpha, compute_dtype, gram_impl)
     new = sample_from_terms(key, bucket.item_ids, G, g, hyper)
     return X_side.at[bucket.item_ids].set(new.astype(X_side.dtype), mode="drop")
 
@@ -110,7 +120,7 @@ def update_side(
     hyper: HyperParams,
     alpha: float,
     compute_dtype=jnp.float32,
-    use_pallas: bool = False,
+    gram_impl: str | bool = "xla",
 ) -> jax.Array:
     """One half-sweep: resample every item of X_side given X_opp.
 
@@ -120,7 +130,7 @@ def update_side(
     """
     for bucket in side.buckets:
         X_side = update_bucket(
-            key, X_side, X_opp, bucket, hyper, alpha, compute_dtype, use_pallas
+            key, X_side, X_opp, bucket, hyper, alpha, compute_dtype, gram_impl
         )
     return X_side
 

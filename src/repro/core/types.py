@@ -151,7 +151,9 @@ class BPMFConfig:
     pipeline_depth: int = 1  # ring_async only: ppermutes in flight (d >= 1)
     sample_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.float32  # contraction dtype (bf16 on TPU)
-    use_pallas: bool = False  # route gram through the Pallas kernel (TPU / interpret)
+    # Gram dispatch: "auto" (autotune cache -> heuristic), "pallas_fused"
+    # (one fused kernel per ring step), "pallas" (per-bucket kernel), "xla"
+    gram_impl: str = "auto"
 
     def prior(self) -> NormalWishartPrior:
         p = NormalWishartPrior.default(self.K, self.sample_dtype)

@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 bpmf_gram: the gather + Gram accumulation inside the per-item conditional
-update (the dominant FLOPs of BPMF, paper SII). ops.py dispatches between
-the Pallas kernel and the jnp reference path.
+update (the dominant FLOPs of BPMF, paper SII) — a per-bucket kernel and a
+fused multi-bucket kernel that lowers a whole ring step to one
+``pallas_call``. ops.py dispatches between the Pallas kernels and the jnp
+reference path; autotune.py owns the measured per-shape decision and its
+persistent cache (DESIGN.md §8).
 """
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

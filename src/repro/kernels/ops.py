@@ -1,22 +1,29 @@
 """Jit'd dispatch wrappers around the Pallas kernels.
 
-Each op picks the best implementation for the current backend:
-  - TPU: the Pallas kernel (one-hot MXU gather) when the shard fits VMEM,
-  - CPU (this container): interpret-mode Pallas for tests, jnp path otherwise.
-The jnp path in ``ref.py`` is the semantic ground truth everywhere.
+Each op picks the best implementation for the current shape and backend via
+``kernels.autotune`` (measured cache entry → deterministic heuristic):
+
+  - ``"pallas_fused"``: one fused ``pallas_call`` per ring step, scatter-
+    accumulating every bucket into the per-item ``(G, g)`` running sums;
+  - ``"pallas"``: the per-bucket one-hot MXU kernel;
+  - ``"xla"``: gather + einsum (``ref.py`` is the semantic ground truth).
+
+On CPU (this container) the Pallas paths run in interpret mode for tests;
+the heuristic therefore defaults to ``"xla"`` off-TPU and only a warmed
+autotune cache (or an explicit ``gram_impl``) selects a kernel.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.bpmf_gram import bpmf_gram_pallas, vmem_bytes_estimate
+from repro.kernels import autotune, ref
+from repro.kernels.bpmf_gram import bpmf_gram_fused, bpmf_gram_pallas, vmem_bytes_estimate
 from repro.utils import round_up
 
-_VMEM_BUDGET = 12 * 2**20  # leave headroom below the ~16 MB/core VMEM
+# re-exported for back-compat: the tiling choice lives with the autotuner now
+pick_tiling = autotune.pick_tiling
+_VMEM_BUDGET = autotune._VMEM_BUDGET
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
@@ -29,13 +36,54 @@ def _pad_axis(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
     return jnp.pad(x, pads, constant_values=fill)
 
 
-def pick_tiling(B: int, P: int, Ns: int, K: int, compute_dtype=jnp.float32) -> tuple[int, int] | None:
-    """Choose (tb, pc) fitting the VMEM budget, or None if the shard is too big."""
-    for tb in (8, 4, 2, 1):
-        for pc in (512, 256, 128):
-            if vmem_bytes_estimate(tb, pc, Ns, K, min(P, 4096), compute_dtype) <= _VMEM_BUDGET:
-                return tb, pc
-    return None
+def _bpmf_gram_xla(
+    X: jax.Array, nbr: jax.Array, val: jax.Array, nnz: jax.Array, compute_dtype
+) -> tuple[jax.Array, jax.Array]:
+    """The production XLA path: gather once, one augmented contraction.
+
+    The masked ``[B, P, K]`` neighbor block is materialized a single time
+    and ``[Xn | val]`` is contracted against itself, so both the Gram
+    matrix and the linear term come out of one einsum — XLA cannot
+    rematerialize the gather per contraction (``ref.bpmf_gram_ref`` stays
+    the naive two-einsum oracle)::
+
+        Z = Y^T Y,  Y = [Xn, val]   →   G = Z[:K, :K],  g = Z[:K, K]
+    """
+    P = nbr.shape[1]
+    mask = (jnp.arange(P, dtype=jnp.int32)[None, :] < nnz[:, None]).astype(compute_dtype)
+    Xn = jnp.take(X, nbr, axis=0).astype(compute_dtype) * mask[..., None]
+    Y = jnp.concatenate([Xn, val.astype(compute_dtype)[..., None]], axis=-1)
+    Z = jnp.einsum("bpi,bpj->bij", Y, Y, preferred_element_type=jnp.float32)
+    return Z[:, :-1, :-1].astype(jnp.float32), Z[:, :-1, -1].astype(jnp.float32)
+
+
+def _fill_tiling(
+    dec: autotune.Decision,
+    B: int,
+    P: int,
+    Ns: int,
+    K: int,
+    compute_dtype,
+    cap: int = 0,
+) -> autotune.Decision:
+    """Complete a pallas decision's missing (tb, pc, ns_chunk) fields.
+
+    Returns ``None`` when the working set cannot fit the VMEM budget even
+    streamed (``chunked_tiling``'s contract) — callers fall back to XLA.
+    Explicit ``tb`` *and* ``pc`` are trusted verbatim (tests/benchmarks).
+    """
+    tb, pc, ns = dec.tb, dec.pc, dec.ns_chunk
+    if tb is not None and pc is not None:
+        return dec
+    tiling = autotune.pick_tiling(B, P, Ns, K, compute_dtype, cap)
+    if tiling is not None:
+        return autotune.Decision(dec.impl, tb or tiling[0], pc or tiling[1], ns)
+    chunked = autotune.chunked_tiling(B, P, Ns, K, compute_dtype, cap)
+    if chunked is None:
+        return None
+    return autotune.Decision(
+        dec.impl, tb or chunked[0], pc or chunked[1], ns or chunked[2]
+    )
 
 
 def bpmf_gram(
@@ -45,24 +93,179 @@ def bpmf_gram(
     nnz: jax.Array,
     *,
     compute_dtype=jnp.float32,
+    impl: str = "auto",
+    tb: int | None = None,
+    pc: int | None = None,
+    ns_chunk: int | None = None,
     force_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Dispatch the gather+Gram op; returns (G [B,K,K] f32, g [B,K] f32)."""
+    """Dispatch the per-bucket gather+Gram op; returns (G [B,K,K], g [B,K]).
+
+    ``impl`` is ``"auto"`` (autotune cache → heuristic), ``"pallas"`` or
+    ``"xla"``; explicit ``tb``/``pc``/``ns_chunk`` override the decision's
+    tiling. ``force_pallas`` is the legacy boolean override (maps to
+    ``impl``). When the shard exceeds the VMEM budget the kernel streams it
+    in ``ns_chunk`` rows instead of falling back to XLA.
+    """
     B, P = nbr.shape
     Ns, K = X.shape
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    tiling = pick_tiling(B, P, Ns, K, compute_dtype)
-    use_pallas = force_pallas if force_pallas is not None else (tiling is not None)
-    if not use_pallas or tiling is None:
-        return ref.bpmf_gram_ref(X, nbr, val, nnz, compute_dtype)
-
-    tb, pc = tiling
-    nbr_p = _pad_axis(_pad_axis(nbr, 1, pc), 0, tb)
-    val_p = _pad_axis(_pad_axis(val, 1, pc), 0, tb)
-    nnz_p = _pad_axis(nnz, 0, tb)
+    if force_pallas is not None:
+        impl = "pallas" if force_pallas else "xla"
+    if impl == "auto":
+        dec = autotune.decide(autotune.bucket_key(B, P, Ns, K, compute_dtype))
+    elif impl in ("pallas", "pallas_fused"):  # fused degenerates to per-bucket here
+        dec = autotune.Decision("pallas", tb, pc, ns_chunk)
+    elif impl == "xla":
+        dec = autotune.Decision("xla")
+    else:
+        raise ValueError(f"unknown impl {impl!r}; one of auto|pallas|xla")
+    if dec.impl != "xla":
+        dec = _fill_tiling(
+            autotune.Decision(
+                dec.impl, tb or dec.tb, pc or dec.pc, ns_chunk or dec.ns_chunk
+            ),
+            B, P, Ns, K, compute_dtype,
+        )
+    if dec is None or dec.impl == "xla":
+        return _bpmf_gram_xla(X, nbr, val, nnz, compute_dtype)
+    nbr_p = _pad_axis(_pad_axis(nbr, 1, dec.pc), 0, dec.tb)
+    val_p = _pad_axis(_pad_axis(val, 1, dec.pc), 0, dec.tb)
+    nnz_p = _pad_axis(nnz, 0, dec.tb)
+    X_p = _pad_axis(X, 0, dec.ns_chunk) if dec.ns_chunk else X
     G, g = bpmf_gram_pallas(
-        X, nbr_p, val_p, nnz_p, tb=tb, pc=pc, compute_dtype=compute_dtype, interpret=interpret
+        X_p, nbr_p, val_p, nnz_p,
+        tb=dec.tb, pc=dec.pc, ns_chunk=dec.ns_chunk,
+        compute_dtype=compute_dtype, interpret=interpret,
     )
     return G[:B], g[:B]
+
+
+def flatten_step(buckets, pc: int, tb: int):
+    """Flatten a ring step's buckets into the fused kernel's chunk layout.
+
+    Every bucket row is split into ``ceil(P / pc)`` width-``pc`` chunks
+    (rows pad to a ``pc`` multiple with dead entries); chunks carry their
+    destination item row and their own valid-count so the kernel needs no
+    per-bucket metadata. Pure reshapes/concats — XLA fuses this into the
+    surrounding sweep, and the layout is identical every sweep so it
+    jit-caches with the step.
+
+    Args:
+        buckets: The step's ``Bucket`` tuple (``item_ids`` may contain -1
+            padding rows, which become dead chunks).
+        pc: Chunk width (the fused kernel's P tile).
+        tb: Chunk-tile height; the flat axis pads to a multiple of it.
+
+    Returns:
+        ``(nbr [C, pc], val [C, pc], item [C], cnt [C])`` with
+        ``C % tb == 0``; dead chunks have ``item == -1`` and ``cnt == 0``.
+    """
+    nbrs, vals, items, cnts = [], [], [], []
+    for b in buckets:
+        B, P = b.nbr.shape
+        ck = round_up(P, pc) // pc
+        nbrs.append(_pad_axis(b.nbr, 1, pc).reshape(B * ck, pc))
+        vals.append(_pad_axis(b.val, 1, pc).reshape(B * ck, pc))
+        items.append(jnp.repeat(b.item_ids, ck))
+        offs = jnp.arange(ck, dtype=jnp.int32) * pc
+        cnts.append(jnp.clip(b.nnz[:, None] - offs[None, :], 0, pc).reshape(B * ck))
+    nbr = _pad_axis(jnp.concatenate(nbrs), 0, tb)
+    val = _pad_axis(jnp.concatenate(vals), 0, tb)
+    item = _pad_axis(jnp.concatenate(items), 0, tb, fill=-1)
+    cnt = _pad_axis(jnp.concatenate(cnts), 0, tb)
+    return nbr, val, item.astype(jnp.int32), cnt.astype(jnp.int32)
+
+
+def bpmf_gram_step(
+    G: jax.Array,
+    g: jax.Array,
+    X_src: jax.Array,
+    buckets,
+    *,
+    alpha: float,
+    compute_dtype=jnp.float32,
+    gram_impl: str = "auto",
+    tb: int | None = None,
+    pc: int | None = None,
+    ns_chunk: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Accumulate one ring step's bucket contributions into ``(G, g)``.
+
+    The distributed half-sweeps call this once per ring step.
+    ``gram_impl="auto"`` resolves the step's :class:`~repro.kernels.autotune.ShapeKey`
+    through the autotune cache/heuristic at trace time; a fused decision
+    lowers the whole step to **one** ``pallas_call`` (flattened chunk
+    layout + in-kernel scatter), while ``"pallas"``/``"xla"`` keep the
+    per-bucket loop with ``at[].add`` scatters. ``"pallas_fused"`` forces
+    the fused kernel (parity tests / benchmarks).
+
+    Args:
+        G: ``[cap, K, K]`` f32 running Gram accumulator.
+        g: ``[cap, K]`` f32 running linear-term accumulator.
+        X_src: ``[Ns, K]`` opposite-side shard for this step.
+        buckets: The step's ``Bucket`` tuple.
+        alpha: Rating noise precision (scales both terms).
+        compute_dtype: Contraction dtype.
+        gram_impl: ``"auto" | "pallas_fused" | "pallas" | "xla"``.
+        tb / pc / ns_chunk: Explicit tiling overrides (tests/benchmarks).
+        interpret: Pallas interpret mode (default: off-TPU).
+
+    Returns:
+        Updated ``(G, g)``.
+    """
+    if not buckets:
+        return G, g
+    Ns, K = X_src.shape
+    cap = G.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shapes = [(b.B, b.P) for b in buckets]
+    if gram_impl == "auto":
+        dec = autotune.decide(autotune.step_key(shapes, Ns, K, cap, compute_dtype))
+    elif gram_impl == "pallas_fused":
+        dec = autotune.Decision("pallas_fused", tb, pc, ns_chunk)
+    elif gram_impl in ("pallas", "xla"):
+        dec = autotune.Decision(gram_impl, tb, pc, ns_chunk)
+    else:
+        raise ValueError(
+            f"unknown gram_impl {gram_impl!r}; one of auto|pallas_fused|pallas|xla"
+        )
+
+    if dec.impl == "pallas_fused":
+        B_tot = sum(b for b, _ in shapes)
+        P_max = max(p for _, p in shapes)
+        dec = _fill_tiling(
+            autotune.Decision(dec.impl, tb or dec.tb, pc or dec.pc, ns_chunk or dec.ns_chunk),
+            B_tot, P_max, Ns, K, compute_dtype, cap,
+        )
+        if dec is None:
+            # fused accumulator windows don't fit: degrade to the
+            # per-bucket kernel (cap-independent), whose own dispatch
+            # still falls back to XLA if even streaming cannot fit
+            dec = autotune.Decision("pallas")
+    if dec.impl == "pallas_fused":
+        nbr, val, item, cnt = flatten_step(buckets, dec.pc, dec.tb)
+        X_p = _pad_axis(X_src, 0, dec.ns_chunk) if dec.ns_chunk else X_src
+        return bpmf_gram_fused(
+            G, g, X_p, nbr, val, item, cnt,
+            alpha=alpha, tb=dec.tb, ns_chunk=dec.ns_chunk,
+            compute_dtype=compute_dtype, interpret=interpret,
+        )
+
+    a = jnp.asarray(alpha, jnp.float32)
+    for b in buckets:
+        # dispatch per bucket so the decision's (tb, pc, ns_chunk) — from
+        # the cache or explicit overrides — actually reaches the kernel
+        Gb, gb = bpmf_gram(
+            X_src, b.nbr, b.val, b.nnz,
+            compute_dtype=compute_dtype, impl=dec.impl,
+            tb=tb or dec.tb, pc=pc or dec.pc,
+            ns_chunk=ns_chunk or dec.ns_chunk, interpret=interpret,
+        )
+        G = G.at[b.item_ids].add(a * Gb, mode="drop")
+        g = g.at[b.item_ids].add(a * gb, mode="drop")
+    return G, g

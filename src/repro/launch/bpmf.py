@@ -44,8 +44,12 @@ def build_parser() -> argparse.ArgumentParser:
                    help="ring_async: ring rotations kept in flight (d >= 1)")
     p.add_argument("--devices", type=int, default=0,
                    help="force N host (CPU) devices before jax init")
+    p.add_argument("--gram-impl", default="auto",
+                   choices=["auto", "pallas_fused", "pallas", "xla"],
+                   help="Gram hot-path dispatch: auto (autotune cache + "
+                        "heuristic), pallas_fused, pallas, or xla")
     p.add_argument("--use-pallas", action="store_true",
-                   help="route Gram terms through the Pallas kernel")
+                   help="deprecated alias for --gram-impl pallas (warns once)")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=0,
                    help="sweeps between auto-saves (0 = none)")
@@ -82,11 +86,16 @@ def main(argv: list[str] | None = None) -> int:
         dataset_kw = dict(path=args.dataset_path)
     coo = load_dataset(args.dataset, **dataset_kw)
 
+    # pass both through: BackendConfig warns on the deprecated flag alone
+    # and raises if it conflicts with an explicit --gram-impl
+    gram_kw = {"gram_impl": args.gram_impl}
+    if args.use_pallas:
+        gram_kw["use_pallas"] = True
     cfg = BPMFConfig().replace(
         name=args.backend,
         num_shards=args.num_shards,
         pipeline_depth=args.pipeline_depth,
-        use_pallas=args.use_pallas,
+        **gram_kw,
         K=args.K,
         alpha=args.alpha,
         num_sweeps=args.sweeps,

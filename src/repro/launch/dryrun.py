@@ -416,7 +416,7 @@ def lower_bpmf(mesh, K: int = 32, comm_mode: str = "ring",
 
     ring = bpmf_ring_from(mesh)
     S = ring.devices.size
-    cfg = BPMFConfig(K=K, comm_mode=comm_mode, use_pallas=False)
+    cfg = BPMFConfig(K=K, comm_mode=comm_mode, gram_impl="xla")
     data = abstract_bpmf_data(S, num_users, num_movies, nnz, K)
     sds = jax.ShapeDtypeStruct
     cap_u, cap_v = data.users.cap, data.movies.cap
