@@ -1,0 +1,132 @@
+"""Serving latency benchmark: batch-size sweep over the posterior predictor.
+
+Trains (or reuses) a serving artifact, loads it through
+``repro.serve.PosteriorPredictor``, and measures end-to-end query latency —
+host batch prep + padded device dispatch + host gather — per batch size,
+plus a top-k catalog-scoring probe. Writes
+``experiments/bench/serve_latency.json`` (schema in
+``experiments/bench/README.md``, validated by
+``scripts/check_bench_schema.py serve_latency``).
+
+    python -m benchmarks.serve_latency            # full sweep
+    python -m benchmarks.serve_latency --smoke    # tiny, for scripts/test.sh
+    python -m benchmarks.serve_latency --artifact /tmp/art   # reuse artifact
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import save_result
+
+
+def _percentiles(times_s: list[float], batch: int) -> dict:
+    arr = np.asarray(times_s) * 1e3
+    return {
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+        "mean_ms": float(arr.mean()),
+        "qps": float(batch / max(arr.mean() / 1e3, 1e-12)),
+    }
+
+
+def build_artifact(args) -> str:
+    """Train a small synthetic run and export its serving artifact."""
+    from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+
+    coo = load_dataset(
+        "synthetic", num_users=args.users, num_movies=args.movies, nnz=args.nnz,
+        noise_std=0.3, seed=0,
+    )
+    cfg = BPMFConfig().replace(
+        name=args.backend, K=args.K, num_sweeps=args.sweeps,
+        burn_in=max(1, args.sweeps // 3), bucket_pads=(8, 32, 128),
+    )
+    engine = BPMFEngine(cfg).fit(coo)
+    return engine.export(tempfile.mkdtemp(prefix="bpmf-serve-bench-") + "/artifact")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny run for CI smoke")
+    ap.add_argument("--artifact", default=None,
+                    help="existing artifact directory (skips training)")
+    ap.add_argument("--backend", default="sequential")
+    ap.add_argument("--users", type=int, default=2000)
+    ap.add_argument("--movies", type=int, default=800)
+    ap.add_argument("--nnz", type=int, default=40_000)
+    ap.add_argument("--K", type=int, default=16)
+    ap.add_argument("--sweeps", type=int, default=8)
+    ap.add_argument("--batches", default="1,8,64,512",
+                    help="comma-separated query batch sizes")
+    ap.add_argument("--repeats", type=int, default=200)
+    ap.add_argument("--top-k", type=int, default=10)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.users, args.movies, args.nnz = 200, 100, 3000
+        args.K, args.sweeps = 6, 3
+        args.batches, args.repeats = "1,8,64", 25
+
+    import jax
+
+    from repro.serve import PosteriorPredictor
+
+    artifact = args.artifact or build_artifact(args)
+    predictor = PosteriorPredictor.load(artifact)
+    meta = predictor.meta
+    rng = np.random.default_rng(0)
+
+    batches = {}
+    for batch in [int(b) for b in args.batches.split(",")]:
+        rows = rng.integers(0, meta.num_users, batch).astype(np.int32)
+        cols = rng.integers(0, meta.num_movies, batch).astype(np.int32)
+        for _ in range(3):  # warmup: compile + cache the pad class
+            predictor.predict(rows, cols)
+        times = []
+        for _ in range(args.repeats):
+            t0 = time.perf_counter()
+            predictor.predict(rows, cols)  # returns host numpy: fully synced
+            times.append(time.perf_counter() - t0)
+        batches[str(batch)] = _percentiles(times, batch)
+        print(f"batch {batch:5d}: p50 {batches[str(batch)]['p50_ms']:.3f} ms  "
+              f"p99 {batches[str(batch)]['p99_ms']:.3f} ms  "
+              f"{batches[str(batch)]['qps']:,.0f} preds/s")
+
+    k = min(args.top_k, meta.num_movies)
+    user = np.int32(0)
+    for _ in range(3):
+        predictor.top_k(user, k)
+    times = []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        predictor.top_k(user, k)
+        times.append(time.perf_counter() - t0)
+    top_k = {"k": k, **_percentiles(times, 1)}
+    print(f"top_{k}: p50 {top_k['p50_ms']:.3f} ms  p99 {top_k['p99_ms']:.3f} ms")
+
+    payload = {
+        "device": jax.default_backend(),
+        "num_devices": len(jax.devices()),
+        "smoke": bool(args.smoke),
+        "repeats": args.repeats,
+        "artifact": {
+            "num_users": meta.num_users,
+            "num_movies": meta.num_movies,
+            "K": meta.K,
+            "num_mean_samples": meta.num_mean_samples,
+            "num_kept_samples": meta.num_kept_samples,
+            "backend": meta.backend,
+        },
+        "batches": batches,
+        "top_k": top_k,
+    }
+    path = save_result("serve_latency", payload)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -81,9 +81,47 @@ def check_fig5_overlap(payload: dict) -> list[str]:
     return errs
 
 
+def check_serve_latency(payload: dict) -> list[str]:
+    """Schema of serve_latency.json (posterior-serving batch-size sweep)."""
+    errs: list[str] = []
+    if payload.get("device") not in ("cpu", "gpu", "tpu"):
+        errs.append(f"device: unexpected {payload.get('device')!r}")
+    if not isinstance(payload.get("repeats"), int) or payload.get("repeats", 0) < 1:
+        errs.append("repeats: missing or < 1")
+    art = payload.get("artifact")
+    if not isinstance(art, dict) or not all(
+        isinstance(art.get(k), int)
+        for k in ("num_users", "num_movies", "K", "num_mean_samples", "num_kept_samples")
+    ):
+        errs.append("artifact: needs int num_users/num_movies/K/"
+                    "num_mean_samples/num_kept_samples")
+    batches = payload.get("batches")
+    if not isinstance(batches, dict) or not batches:
+        errs.append("batches: missing or empty")
+        return errs
+    lat_keys = ("p50_ms", "p99_ms", "mean_ms", "qps")
+    for name, e in batches.items():
+        where = f"batches[{name}]"
+        if not name.isdigit() or int(name) < 1:
+            errs.append(f"{where}: key must be a positive batch size")
+        if not isinstance(e, dict) or any(
+            not isinstance(e.get(k), (int, float)) or e.get(k, 0) <= 0 for k in lat_keys
+        ):
+            errs.append(f"{where}: needs positive numeric {lat_keys}")
+        elif e["p50_ms"] > e["p99_ms"] + 1e-9:
+            errs.append(f"{where}: p50_ms > p99_ms")
+    tk = payload.get("top_k")
+    if not isinstance(tk, dict) or not isinstance(tk.get("k"), int) or any(
+        not isinstance(tk.get(k), (int, float)) or tk.get(k, 0) <= 0 for k in lat_keys
+    ):
+        errs.append(f"top_k: needs int k and positive numeric {lat_keys}")
+    return errs
+
+
 CHECKERS = {
     "fig2_item_update": check_fig2_item_update,
     "fig5_overlap": check_fig5_overlap,
+    "serve_latency": check_serve_latency,
 }
 
 

@@ -8,10 +8,14 @@
 #
 #   scripts/test.sh                     # full tier-1 suite
 #   scripts/test.sh tests/test_engine.py -k parity
+#   scripts/test.sh -m "not slow"       # skip the subprocess/multidevice tests
 #   scripts/test.sh --bench-smoke       # + 2-sweep ring_async CLI smoke run
 #   scripts/test.sh --autotune-smoke    # + fig2 autotune driver (2 shapes,
 #                                       #   tiny budget) + JSON schema check
 #                                       #   + use_pallas shim warns-once check
+#   scripts/test.sh --serve-smoke       # + train 2 sweeps -> export artifact
+#                                       #   -> serve one-shot + JSONL queries
+#                                       #   -> serve_latency --smoke + schema
 #
 # Always runs the public-API docstring-coverage gate
 # (scripts/check_docstrings.py) before pytest.
@@ -25,12 +29,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
 AUTOTUNE_SMOKE=0
+SERVE_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
     BENCH_SMOKE=1
   elif [[ "$a" == "--autotune-smoke" ]]; then
     AUTOTUNE_SMOKE=1
+  elif [[ "$a" == "--serve-smoke" ]]; then
+    SERVE_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -65,6 +72,23 @@ assert len(dep) == 1, f"expected exactly 1 use_pallas warning, got {len(dep)}"
 assert a.gram_impl == "pallas" and b.gram_impl == "xla", (a.gram_impl, b.gram_impl)
 print("use_pallas shim OK: warned once, mapped to gram_impl")
 PY
+fi
+
+if [[ "$SERVE_SMOKE" == 1 ]]; then
+  echo "== serve smoke: 2-sweep train -> export -> serve queries =="
+  SERVE_TMP="$(mktemp -d)"
+  ART="$SERVE_TMP/artifact"
+  python -m repro.launch.bpmf --backend sequential --dataset synthetic \
+    --sweeps 2 --burn-in 1 --K 4 --users 80 --movies 40 --nnz 800 \
+    --export-artifact "$ART"
+  python -m repro.launch.serve --artifact "$ART" --rows 0,1,2 --cols 0,1,2 --std
+  python -m repro.launch.serve --artifact "$ART" --user 0 --top-k 5
+  printf '{"rows": [3, 4], "cols": [5, 6]}\n{"user": 1, "k": 3}\n' | \
+    python -m repro.launch.serve --artifact "$ART" --jsonl
+  echo "== serve latency smoke + schema check =="
+  python -m benchmarks.serve_latency --smoke --artifact "$ART"
+  python scripts/check_bench_schema.py serve_latency
+  rm -rf "$SERVE_TMP"
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

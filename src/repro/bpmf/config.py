@@ -78,6 +78,10 @@ class RunConfig:
         checkpoint_every: Sweeps between auto-saves; 0 = explicit
             ``save()`` only.
         keep_checkpoints: Retention window (older steps are pruned).
+        keep_factor_samples: Most recent post-burn-in ``(U, V)`` samples
+            retained for the serving artifact's predictive-std output
+            (DESIGN.md §9); 0 keeps only the running posterior mean and
+            disables ``return_std`` on the exported predictor.
     """
 
     num_sweeps: int = 50
@@ -87,6 +91,14 @@ class RunConfig:
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0  # sweeps between auto-saves; 0 = explicit save() only
     keep_checkpoints: int = 3
+    keep_factor_samples: int = 8  # recent post-burn-in samples for predictive std
+
+    def __post_init__(self) -> None:
+        if self.keep_factor_samples < 0:
+            raise ValueError(
+                f"RunConfig.keep_factor_samples must be >= 0, "
+                f"got {self.keep_factor_samples}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,13 +31,86 @@ import numpy as np
 
 from repro.bpmf.backends import Backend, get_backend
 from repro.bpmf.config import BPMFConfig
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, CheckpointSchemaError
 from repro.core.gibbs import SweepMetrics
 from repro.data.sparse import RatingsCOO
+from repro.serve import ArtifactMeta, PosteriorPredictor, save_artifact
+
+
+class _PosteriorAccumulator:
+    """Running posterior-mean factors + a bounded window of recent samples.
+
+    Feeds the serving artifact (DESIGN.md §9): ``U_sum / count`` is the
+    plug-in posterior mean over every post-burn-in sweep, and ``samples``
+    keeps the ``keep`` most recent post-burn-in ``(U, V)`` draws for
+    predictive-std output. All host-side float32 so a checkpoint-resumed
+    run accumulates bitwise the same artifact as an uninterrupted one.
+    """
+
+    def __init__(self, keep: int):
+        self.keep = keep
+        self.U_sum: np.ndarray | None = None
+        self.V_sum: np.ndarray | None = None
+        self.count = 0
+        self.samples: list[tuple[np.ndarray, np.ndarray]] = []
+
+    def update(self, U: np.ndarray, V: np.ndarray) -> None:
+        """Fold one post-burn-in sample into the mean and the window."""
+        U = np.asarray(U, np.float32)
+        V = np.asarray(V, np.float32)
+        if self.U_sum is None:
+            self.U_sum, self.V_sum = U.copy(), V.copy()
+        else:
+            self.U_sum += U
+            self.V_sum += V
+        self.count += 1
+        if self.keep > 0:
+            self.samples.append((U, V))
+            del self.samples[: -self.keep]
+
+    def mean(self) -> tuple[np.ndarray, np.ndarray]:
+        """(U_mean, V_mean) over the accumulated samples (count > 0)."""
+        n = np.float32(self.count)
+        return self.U_sum / n, self.V_sum / n
+
+    def stacked(self) -> tuple[np.ndarray, np.ndarray]:
+        """Window as [S, N, K] / [S, M, K] stacks (S may be 0)."""
+        if not self.samples:
+            return np.zeros((0, 0, 0), np.float32), np.zeros((0, 0, 0), np.float32)
+        return (
+            np.stack([u for u, _ in self.samples]),
+            np.stack([v for _, v in self.samples]),
+        )
+
+    def tree(self) -> dict:
+        """Checkpointable pytree (fixed key set, shapes vary with count)."""
+        zero = np.zeros((0, 0), np.float32)
+        Us, Vs = self.stacked()
+        return {
+            "U_sum": zero if self.U_sum is None else self.U_sum,
+            "V_sum": zero if self.V_sum is None else self.V_sum,
+            "count": np.asarray(self.count, np.int32),
+            "U_samples": Us,
+            "V_samples": Vs,
+        }
+
+    def load_tree(self, tree: dict) -> None:
+        """Restore from :meth:`tree` output (trims to this run's ``keep``)."""
+        self.count = int(tree["count"])
+        # np.array, not asarray: device arrays give read-only host views and
+        # the running sums are mutated in place
+        U_sum = np.array(tree["U_sum"], np.float32)
+        V_sum = np.array(tree["V_sum"], np.float32)
+        self.U_sum = U_sum if self.count else None
+        self.V_sum = V_sum if self.count else None
+        Us = np.asarray(tree["U_samples"], np.float32)
+        Vs = np.asarray(tree["V_samples"], np.float32)
+        self.samples = [(Us[i], Vs[i]) for i in range(Us.shape[0])]
+        del self.samples[: max(len(self.samples) - self.keep, 0)]
 
 
 class BPMFEngine:
-    """Fit / sample / predict / save / restore over a pluggable backend."""
+    """Fit / sample / predict / save / restore / export over a pluggable backend."""
 
     def __init__(self, cfg: BPMFConfig | None = None):
         """Build an engine (and its backend) from a config.
@@ -54,6 +127,9 @@ class BPMFEngine:
         self._sweeps_done = 0
         self._data_fingerprint: tuple[int, int, int] | None = None
         self._ckpt: Optional[CheckpointManager] = None
+        self._posterior = _PosteriorAccumulator(self.cfg.run.keep_factor_samples)
+        self._predictor: Optional[PosteriorPredictor] = None
+        self._predictor_sweep = -1
         key = jax.random.key(self.cfg.run.seed)
         self._k_init, self._k_run = jax.random.split(key)
 
@@ -130,6 +206,9 @@ class BPMFEngine:
                 self._k_run, self._state, self._pred
             )
             self._sweeps_done += 1
+            if self._sweeps_done > self.cfg.run.burn_in:
+                # same gating as the in-sweep PredictionState accumulator
+                self._posterior.update(*self.factors())
             metrics = jax.tree_util.tree_map(float, metrics)
             self.history.append(metrics)
             if every and self._sweeps_done % every == 0:
@@ -180,23 +259,99 @@ class BPMFEngine:
         self._ensure_state()
         return self.backend.factors(self._state)
 
-    def predict(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
-        """Point predictions for arbitrary (user, movie) pairs.
+    def predict(
+        self, rows: np.ndarray, cols: np.ndarray, return_std: bool = False
+    ) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+        """Posterior-mean predictions for arbitrary (user, movie) pairs.
 
-        Uses the current posterior sample's factors; for posterior-mean
-        test-set predictions use the streamed ``rmse_avg`` metrics.
+        Delegates to the same jitted :class:`repro.serve.PosteriorPredictor`
+        program a ``BPMFEngine.export()`` artifact serves, so in-process and
+        served predictions agree bitwise. Uses the posterior-mean factors
+        once post-burn-in samples exist; before that, the current sample's.
 
         Args:
             rows: ``[N]`` user ids (original numbering).
             cols: ``[N]`` movie ids (original numbering).
+            return_std: Also return the predictive std over the retained
+                factor samples (``RunConfig.keep_factor_samples``).
 
         Returns:
-            ``[N]`` predicted ratings, clipped to the training range.
+            ``[N]`` predicted ratings, clipped to the training range — or
+            ``(preds, std)`` when ``return_std``.
         """
-        U, V = self.factors()
+        return self.predictor().predict(rows, cols, return_std=return_std)
+
+    def predictor(self) -> PosteriorPredictor:
+        """In-process serving predictor over the current posterior summary.
+
+        Cached per completed sweep; rebuilt lazily after the state advances.
+
+        Returns:
+            A :class:`repro.serve.PosteriorPredictor` — also the gateway to
+            ``top_k`` recommendations without an export round-trip.
+        """
+        self._ensure_state()
+        if self._predictor is None or self._predictor_sweep != self._sweeps_done:
+            self._predictor = PosteriorPredictor.from_engine(self)
+            self._predictor_sweep = self._sweeps_done
+        return self._predictor
+
+    # ------------------------------------------------------------------
+    # serving export
+    # ------------------------------------------------------------------
+    def _artifact_payload(self) -> tuple[ArtifactMeta, dict[str, np.ndarray]]:
+        """(meta, arrays) of the serving artifact for the current posterior.
+
+        Posterior-mean factors when post-burn-in samples have been
+        accumulated, else the current raw sample (``num_mean_samples=0``).
+        """
+        self._ensure_state()
+        if self._posterior.count:
+            U_mean, V_mean = self._posterior.mean()
+        else:
+            U_mean, V_mean = self.factors()
+        U_mean = np.asarray(U_mean, np.float32)
+        V_mean = np.asarray(V_mean, np.float32)
+        Us, Vs = self._posterior.stacked()
+        S = len(self._posterior.samples)
+        if S == 0:  # canonical empty shapes for the artifact schema
+            Us = np.zeros((0,) + U_mean.shape, np.float32)
+            Vs = np.zeros((0,) + V_mean.shape, np.float32)
         lo, hi = self.backend.rating_range
-        preds = np.einsum("nk,nk->n", U[np.asarray(rows)], V[np.asarray(cols)])
-        return np.clip(preds + self.backend.mean_rating, lo, hi)
+        meta = ArtifactMeta(
+            num_users=int(U_mean.shape[0]),
+            num_movies=int(V_mean.shape[0]),
+            K=int(U_mean.shape[1]),
+            mean_rating=float(self.backend.mean_rating),
+            min_rating=float(lo),
+            max_rating=float(hi),
+            num_mean_samples=self._posterior.count,
+            num_kept_samples=S,
+            backend=self.cfg.backend.name,
+            num_sweeps_done=self._sweeps_done,
+            seed=self.cfg.run.seed,
+        )
+        arrays = {"U_mean": U_mean, "V_mean": V_mean, "U_samples": Us, "V_samples": Vs}
+        return meta, arrays
+
+    def export(self, directory: str) -> str:
+        """Write the versioned serving artifact for the current posterior.
+
+        The export hook of the serving path (DESIGN.md §9): persists the
+        posterior-mean factors, the retained per-sweep samples, the global
+        mean/clip range and dataset metadata via the checkpoint layer, for
+        :class:`repro.serve.PosteriorPredictor` / ``python -m
+        repro.launch.serve`` to load without re-running MCMC.
+
+        Args:
+            directory: Artifact directory (replaced if it already holds
+                an artifact).
+
+        Returns:
+            The artifact directory.
+        """
+        meta, arrays = self._artifact_payload()
+        return save_artifact(directory, meta, arrays)
 
     # ------------------------------------------------------------------
     # checkpointing (sweep-level save / resume)
@@ -218,7 +373,13 @@ class BPMFEngine:
             np.float32,
         ).reshape(-1, 3)
         self._manager().save(
-            step, {"state": self._state, "pred": self._pred, "history": hist}
+            step,
+            {
+                "state": self._state,
+                "pred": self._pred,
+                "history": hist,
+                "posterior": self._posterior.tree(),
+            },
         )
         return step
 
@@ -229,6 +390,10 @@ class BPMFEngine:
         ``prepare`` first) so the restore target has the right shapes.
         Metric history up to the checkpointed sweep is restored too, so
         ``rmse`` and ``history`` are complete even in a fresh process.
+        Checkpoints written before the serving subsystem (no ``posterior``
+        subtree) still restore; the posterior accumulator just restarts
+        empty, so a subsequent ``export()`` only reflects sweeps run after
+        the resume.
 
         Args:
             data: Ratings to ``prepare()`` first, if not already prepared.
@@ -247,15 +412,27 @@ class BPMFEngine:
         step = mgr.latest() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {self.cfg.run.checkpoint_dir}")
-        tree = mgr.restore(
-            {
-                "state": self._state,
-                "pred": self._pred,
-                "history": np.zeros((0, 3), np.float32),
-            },
-            step=step,
-        )
+        target = {
+            "state": self._state,
+            "pred": self._pred,
+            "history": np.zeros((0, 3), np.float32),
+            "posterior": self._posterior.tree(),
+        }
+        try:
+            tree = mgr.restore(target, step=step)
+            self._posterior.load_tree(tree["posterior"])
+        except CheckpointSchemaError:
+            # checkpoint written before the serving subsystem: no posterior
+            # subtree. Restore everything else and start the accumulator
+            # empty — export() degrades to the raw current sample until new
+            # post-burn-in sweeps accumulate. (A genuinely damaged
+            # checkpoint re-raises from the second restore.)
+            tree = mgr.restore(
+                {k: v for k, v in target.items() if k != "posterior"}, step=step
+            )
+            self._posterior = _PosteriorAccumulator(self.cfg.run.keep_factor_samples)
         self._state, self._pred = tree["state"], tree["pred"]
+        self._predictor, self._predictor_sweep = None, -1
         self._sweeps_done = step
         self.history = [
             SweepMetrics(float(r[0]), float(r[1]), float(r[2]))

@@ -1,4 +1,19 @@
-from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointSchemaError,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = [
+    "CheckpointCorruptError",
+    "CheckpointError",
+    "CheckpointSchemaError",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "CheckpointManager",
+]

@@ -39,6 +39,31 @@ Tree = Any
 _MANIFEST = "manifest.json"
 
 
+class CheckpointError(Exception):
+    """Base class for typed checkpoint/artifact read failures.
+
+    Raised instead of letting raw ``json``/``numpy`` tracebacks escape, so
+    callers (the engine, the serving loader, ops tooling) can distinguish
+    "this directory is not a checkpoint" (``FileNotFoundError``) from "this
+    checkpoint is damaged" (:class:`CheckpointCorruptError`) from "this
+    checkpoint has a different schema" (:class:`CheckpointSchemaError`).
+    """
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A committed checkpoint is unreadable: truncated leaf file, garbage
+    manifest, or an unparsable ``LATEST`` pointer."""
+
+
+class CheckpointSchemaError(CheckpointError, ValueError):
+    """The checkpoint is readable but its leaf set does not match the
+    restore target (schema drift: missing or renamed leaves).
+
+    Subclasses ``ValueError`` for backward compatibility with callers that
+    matched the old untyped ``missing leaves`` error.
+    """
+
+
 def _leaf_paths(tree: Tree) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
 
@@ -88,7 +113,13 @@ def latest_step(directory: str) -> Optional[int]:
     if not os.path.exists(path):
         return None
     with open(path) as f:
-        return int(f.read().strip())
+        raw = f.read().strip()
+    try:
+        return int(raw)
+    except ValueError as e:
+        raise CheckpointCorruptError(
+            f"unparsable LATEST pointer {path!r}: {raw[:40]!r}"
+        ) from e
 
 
 def restore_checkpoint(
@@ -109,14 +140,28 @@ def restore_checkpoint(
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint under {directory}")
     final = _step_dir(directory, step)
-    with open(os.path.join(final, _MANIFEST)) as f:
-        manifest = json.load(f)
-    by_name = {e["name"]: e for e in manifest["leaves"]}
+    if not os.path.isdir(final):
+        raise FileNotFoundError(f"no checkpoint directory {final}")
+    manifest_path = os.path.join(final, _MANIFEST)
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint manifest {manifest_path}: {e}"
+        ) from e
+    if not isinstance(manifest, dict) or not isinstance(manifest.get("leaves"), list):
+        raise CheckpointCorruptError(
+            f"checkpoint manifest {manifest_path} has no leaf table"
+        )
+    by_name = {e["name"]: e for e in manifest["leaves"] if isinstance(e, dict)}
 
     names = [n for n, _ in _leaf_paths(target)]
     missing = [n for n in names if n not in by_name]
     if missing:
-        raise ValueError(f"checkpoint {final} missing leaves: {missing[:5]}...")
+        raise CheckpointSchemaError(
+            f"checkpoint {final} missing leaves: {missing[:5]}..."
+        )
 
     shard_leaves = None
     if shardings is not None:
@@ -124,7 +169,14 @@ def restore_checkpoint(
 
     out_leaves = []
     for i, name in enumerate(names):
-        arr = np.load(os.path.join(final, f"{name}.npy"))
+        leaf_path = os.path.join(final, f"{name}.npy")
+        try:
+            arr = np.load(leaf_path)
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable checkpoint leaf {leaf_path} (truncated or "
+                f"overwritten?): {e}"
+            ) from e
         if shard_leaves is not None:
             out_leaves.append(jax.device_put(arr, shard_leaves[i]))
         elif mesh is not None:

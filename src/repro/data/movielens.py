@@ -6,6 +6,7 @@ distribution-matched synthetic stand-in (documented in DESIGN.md §6).
 """
 from __future__ import annotations
 
+import itertools
 import os
 
 import numpy as np
@@ -14,13 +15,56 @@ from repro.data.sparse import RatingsCOO
 from repro.data.synthetic import CHEMBL_LIKE, ML20M_LIKE, ML100K_LIKE, synthetic_ratings
 from repro.utils import logger
 
+_CSV_CHUNK_ROWS = 1_000_000  # ~72 MB peak per chunk vs ~GBs for one-shot parse
 
-def _parse_ratings_csv(path: str) -> RatingsCOO:
+
+def _read_rating_chunks(
+    path: str,
+    *,
+    delimiter: str | None,
+    skip_header: int,
+    chunk_rows: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stream a 3+-column rating file in bounded chunks.
+
+    The previous one-shot ``np.genfromtxt`` materialized the whole file as an
+    ``[nnz, ncols]`` float64 table (plus the raw text) before any downcast —
+    a multi-GB transient on ml-20m-scale inputs. Parsing ``chunk_rows`` lines
+    at a time and downcasting ids/values per chunk bounds peak memory by the
+    chunk size regardless of file length, with byte-identical output.
+
+    Returns:
+        ``(col0, col1, vals)`` — raw int64 ids and float32 ratings.
+    """
+    id0, id1, vals = [], [], []
+    with open(path) as f:
+        for _ in range(skip_header):
+            f.readline()
+        while True:
+            lines = list(itertools.islice(f, chunk_rows))
+            if not lines:
+                break
+            lines = [ln for ln in lines if ln.strip()]
+            if not lines:  # chunk of blank lines (e.g. trailing newlines)
+                continue
+            chunk = np.atleast_2d(
+                np.genfromtxt(lines, delimiter=delimiter, usecols=(0, 1, 2), dtype=np.float64)
+            )
+            if chunk.size == 0:
+                continue
+            id0.append(chunk[:, 0].astype(np.int64))
+            id1.append(chunk[:, 1].astype(np.int64))
+            vals.append(chunk[:, 2].astype(np.float32))
+    if not id0:
+        raise ValueError(f"no ratings parsed from {path!r}")
+    return np.concatenate(id0), np.concatenate(id1), np.concatenate(vals)
+
+
+def _parse_ratings_csv(path: str, chunk_rows: int = _CSV_CHUNK_ROWS) -> RatingsCOO:
     """ml-20m ratings.csv: userId,movieId,rating,timestamp (with header)."""
-    data = np.genfromtxt(path, delimiter=",", skip_header=1, usecols=(0, 1, 2), dtype=np.float64)
-    users_raw = data[:, 0].astype(np.int64)
-    movies_raw = data[:, 1].astype(np.int64)
-    vals = data[:, 2].astype(np.float32)
+    users_raw, movies_raw, vals = _read_rating_chunks(
+        path, delimiter=",", skip_header=1, chunk_rows=chunk_rows
+    )
     _, users = np.unique(users_raw, return_inverse=True)
     _, movies = np.unique(movies_raw, return_inverse=True)
     return RatingsCOO(
@@ -29,12 +73,13 @@ def _parse_ratings_csv(path: str) -> RatingsCOO:
     )
 
 
-def _parse_udata(path: str) -> RatingsCOO:
+def _parse_udata(path: str, chunk_rows: int = _CSV_CHUNK_ROWS) -> RatingsCOO:
     """ml-100k u.data: user \t item \t rating \t timestamp."""
-    data = np.loadtxt(path, dtype=np.float64)
-    users = data[:, 0].astype(np.int64) - 1
-    movies = data[:, 1].astype(np.int64) - 1
-    vals = data[:, 2].astype(np.float32)
+    users_raw, movies_raw, vals = _read_rating_chunks(
+        path, delimiter=None, skip_header=0, chunk_rows=chunk_rows
+    )
+    users = users_raw - 1
+    movies = movies_raw - 1
     return RatingsCOO(
         users.astype(np.int32), movies.astype(np.int32), vals,
         int(users.max()) + 1, int(movies.max()) + 1,

@@ -14,10 +14,10 @@ arguments before importing anything heavy.
 from __future__ import annotations
 
 import argparse
-import os
-import re
 import sys
 import time
+
+from repro.launch.hostdevices import force_host_device_count
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -50,6 +50,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "heuristic), pallas_fused, pallas, or xla")
     p.add_argument("--use-pallas", action="store_true",
                    help="deprecated alias for --gram-impl pallas (warns once)")
+    p.add_argument("--export-artifact", default=None,
+                   help="after the run, write the posterior serving artifact "
+                        "here (consumed by python -m repro.launch.serve)")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=0,
                    help="sweeps between auto-saves (0 = none)")
@@ -62,17 +65,7 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
 
-    if args.devices:
-        # strip any inherited count so --devices always wins (jax locks the
-        # device count at first backend init, so this must happen up front)
-        flags = re.sub(
-            r"--xla_force_host_platform_device_count=\d+",
-            "",
-            os.environ.get("XLA_FLAGS", ""),
-        ).strip()
-        os.environ["XLA_FLAGS"] = (
-            f"{flags} --xla_force_host_platform_device_count={args.devices}".strip()
-        )
+    force_host_device_count(args.devices)
 
     # heavy imports only after XLA_FLAGS is settled
     import jax
@@ -131,6 +124,9 @@ def main(argv: list[str] | None = None) -> int:
         f"final rmse(avg)={engine.rmse:.4f} after {engine.num_sweeps_done} sweeps "
         f"({swept} this run) in {dt:.2f}s ({updates / max(dt, 1e-9):,.0f} item updates/s)"
     )
+    if args.export_artifact:
+        path = engine.export(args.export_artifact)
+        print(f"exported serving artifact to {path}")
     return 0
 
 

@@ -37,7 +37,7 @@ from repro.models.config import ModelConfig
 from repro.models.model import LMModel, build_model
 from repro.models.module import DECODE_RULES, SERVE_RULES, TRAIN_RULES, ZERO_RULES, ShardingRules
 from repro.training.optimizer import AdamW
-from repro.training.serve import make_decode_step, make_prefill_step
+from repro.training.lm_serve import make_decode_step, make_prefill_step
 from repro.training.train import (
     abstract_batch,
     abstract_train_state,

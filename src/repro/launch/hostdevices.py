@@ -1,0 +1,35 @@
+"""Force a host (CPU) device count before jax initializes.
+
+jax locks the device count at first backend init, so every CLI that offers
+``--devices N`` must rewrite ``XLA_FLAGS`` *before* any jax import — which
+is why this helper imports nothing heavy and why the CLIs parse arguments
+first. Shared by ``repro.launch.bpmf`` and ``repro.launch.serve``
+(tests/conftest.py keeps its own copy because it edits a subprocess env
+dict, not this process).
+"""
+from __future__ import annotations
+
+import os
+import re
+
+
+def force_host_device_count(n: int) -> None:
+    """Rewrite ``XLA_FLAGS`` so jax sees ``n`` host devices.
+
+    Strips any inherited ``--xla_force_host_platform_device_count`` flag so
+    the requested count always wins. Must run before jax initializes; a
+    no-op for ``n <= 0``.
+
+    Args:
+        n: Host device count to force.
+    """
+    if n <= 0:
+        return
+    flags = re.sub(
+        r"--xla_force_host_platform_device_count=\d+",
+        "",
+        os.environ.get("XLA_FLAGS", ""),
+    ).strip()
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    )

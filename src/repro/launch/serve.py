@@ -1,79 +1,142 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+"""BPMF serving CLI: answer rating queries from an exported artifact.
 
-    python -m repro.launch.serve --arch gemma-2b --reduced --batch 4 \
-        --prompt-len 64 --gen 32
+One-shot query mode (JSON on stdout)::
+
+    python -m repro.launch.serve --artifact /tmp/bpmf-art --rows 0,1,2 --cols 5,6,7
+    python -m repro.launch.serve --artifact /tmp/bpmf-art --user 7 --top-k 10
+
+Micro-batch loop: one JSON request per stdin line, one JSON response per
+stdout line (a minimal sidecar-friendly serving loop)::
+
+    printf '{"rows": [0, 1], "cols": [5, 6]}\n{"user": 7, "k": 3}\n' | \\
+        python -m repro.launch.serve --artifact /tmp/bpmf-art --jsonl
+
+Requests: ``{"rows": [...], "cols": [...], "std": bool?}`` for point
+predictions, ``{"user": id, "k": n}`` for top-k. Malformed requests yield
+``{"error": ...}`` responses; the loop keeps serving. ``--devices N``
+forces N host devices before jax initializes (same contract as
+``repro.launch.bpmf``) so the mesh-sharded batch path is exercisable on CPU.
+
+The LM prefill/decode driver that previously lived here moved with its
+step builders to ``repro.training.lm_serve`` (dry-run tooling only).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import sys
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
-from repro.models.model import build_model
-from repro.models.module import DECODE_RULES, SERVE_RULES
-from repro.training.serve import make_decode_step, make_prefill_step
-from repro.utils import logger
+from repro.launch.hostdevices import force_host_device_count
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Serve posterior-mean BPMF predictions from an exported artifact.",
+    )
+    p.add_argument("--artifact", required=True,
+                   help="artifact directory written by BPMFEngine.export() / "
+                        "repro.launch.bpmf --export-artifact")
+    p.add_argument("--rows", default=None,
+                   help="comma-separated user ids for a one-shot prediction batch")
+    p.add_argument("--cols", default=None,
+                   help="comma-separated movie ids (paired with --rows)")
+    p.add_argument("--user", type=int, default=None,
+                   help="one-shot top-k: user id to rank the catalog for")
+    p.add_argument("--top-k", type=int, default=10,
+                   help="number of movies returned with --user")
+    p.add_argument("--std", action="store_true",
+                   help="include the predictive std (needs retained samples)")
+    p.add_argument("--jsonl", action="store_true",
+                   help="micro-batch loop: JSONL requests on stdin, JSON "
+                        "responses on stdout")
+    p.add_argument("--devices", type=int, default=0,
+                   help="force N host (CPU) devices before jax init")
+    return p
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.is_encoder:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
-    model = build_model(cfg)
-    mesh = make_host_mesh(model=args.model_parallel)
-    key = jax.random.key(args.seed)
-    params = model.init(key)
 
-    max_len = args.prompt_len + args.gen
-    cache = model.init_cache(args.batch, max_len)
-    prefill = jax.jit(make_prefill_step(model, SERVE_RULES, mesh), donate_argnums=(2,))
-    decode = jax.jit(make_decode_step(model, DECODE_RULES, mesh, args.temperature),
-                     donate_argnums=(2,))
+def _parse_ids(text: str, flag: str) -> list[int]:
+    try:
+        return [int(x) for x in text.split(",") if x.strip() != ""]
+    except ValueError as e:
+        raise SystemExit(f"{flag} must be a comma-separated id list: {e}")
 
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    t0 = time.time()
-    logits, cache = prefill(params, prompt, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
 
-    out = [tok]
-    t0 = time.time()
-    for t in range(args.gen - 1):
-        tok, cache = decode(params, tok, cache,
-                            jnp.asarray(args.prompt_len + t, jnp.int32),
-                            jax.random.fold_in(key, t))
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+def _handle(predictor, req: dict) -> dict:
+    """One request -> one response dict (predict or top_k)."""
+    if "rows" in req or "cols" in req:
+        preds = predictor.predict(
+            req.get("rows", ()), req.get("cols", ()), return_std=bool(req.get("std"))
+        )
+        if isinstance(preds, tuple):
+            preds, std = preds
+            return {"predictions": preds.tolist(), "std": std.tolist()}
+        return {"predictions": preds.tolist()}
+    if "user" in req:
+        ids, scores = predictor.top_k(int(req["user"]), int(req.get("k", 10)))
+        return {"user": int(req["user"]), "items": ids.tolist(),
+                "scores": scores.tolist()}
+    return {"error": "request needs either rows/cols or user"}
 
-    gen = jnp.concatenate(out, axis=1)
-    logger.info("prefill: %d tokens in %.3fs (%.0f tok/s)",
-                args.batch * args.prompt_len, t_prefill,
-                args.batch * args.prompt_len / max(t_prefill, 1e-9))
-    logger.info("decode: %d steps in %.3fs (%.1f tok/s/seq, %.1f total tok/s)",
-                args.gen - 1, t_decode, (args.gen - 1) / max(t_decode, 1e-9),
-                args.batch * (args.gen - 1) / max(t_decode, 1e-9))
-    logger.info("sample generations (token ids): %s", gen[:2, :12].tolist())
-    assert gen.shape == (args.batch, args.gen)
-    assert bool(jnp.all((gen >= 0) & (gen < cfg.padded_vocab)))
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    force_host_device_count(args.devices)
+
+    # heavy imports only after XLA_FLAGS is settled
+    from repro.serve import ArtifactError, PosteriorPredictor
+
+    try:
+        predictor = PosteriorPredictor.load(args.artifact)
+    except ArtifactError as e:
+        print(f"cannot load artifact: {e}", file=sys.stderr)
+        return 1
+    meta = predictor.meta
+    print(
+        f"serving artifact {args.artifact}: R {meta.num_users} x "
+        f"{meta.num_movies}, K={meta.K}, backend={meta.backend}, "
+        f"{meta.num_mean_samples} posterior samples averaged, "
+        f"{meta.num_kept_samples} kept for std",
+        file=sys.stderr,
+    )
+
+    def handle_safe(req: dict) -> dict:
+        # invalid queries (out-of-range ids, --std without retained samples)
+        # become error responses in every mode, never tracebacks
+        try:
+            return _handle(predictor, req)
+        except (ValueError, KeyError, TypeError) as e:
+            return {"error": f"{type(e).__name__}: {e}"}
+
+    if args.jsonl:
+        for line in sys.stdin:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                resp = handle_safe(json.loads(line))
+            except ValueError as e:  # json.JSONDecodeError
+                resp = {"error": f"{type(e).__name__}: {e}"}
+            print(json.dumps(resp), flush=True)
+        return 0
+
+    if args.user is not None:
+        req = {"user": args.user, "k": args.top_k}
+    elif args.rows is not None and args.cols is not None:
+        req = {"rows": _parse_ids(args.rows, "--rows"),
+               "cols": _parse_ids(args.cols, "--cols")}
+        if args.std:
+            req["std"] = True
+    else:
+        print("one-shot mode needs --rows AND --cols (or --user, or --jsonl)",
+              file=sys.stderr)
+        return 2
+    resp = handle_safe(req)
+    if "error" in resp:
+        print(json.dumps(resp), file=sys.stderr)
+        return 1
+    print(json.dumps(resp))
     return 0
 
 

@@ -1,0 +1,36 @@
+"""``repro.serve`` — posterior-mean serving over exported BPMF artifacts.
+
+The post-training half of the ROADMAP's "serve heavy traffic" north star:
+``BPMFEngine.export()`` persists the sampled posterior as a versioned
+artifact (:mod:`repro.serve.artifact`), and :class:`PosteriorPredictor`
+(:mod:`repro.serve.predictor`) loads it into a jit-compiled, mesh-sharded
+batch predictor — ``predict(rows, cols)`` and ``top_k(user, k)`` with
+optional predictive-std output, no sampler in the process. CLI:
+``python -m repro.launch.serve``; architecture notes in DESIGN.md §9.
+"""
+from repro.serve.artifact import (
+    ARRAY_KEYS,
+    SERVE_ARTIFACT_VERSION,
+    ArtifactCorruptError,
+    ArtifactError,
+    ArtifactMeta,
+    ArtifactNotFoundError,
+    ArtifactSchemaError,
+    load_artifact,
+    save_artifact,
+)
+from repro.serve.predictor import PosteriorPredictor, serve_mesh
+
+__all__ = [
+    "ARRAY_KEYS",
+    "SERVE_ARTIFACT_VERSION",
+    "ArtifactCorruptError",
+    "ArtifactError",
+    "ArtifactMeta",
+    "ArtifactNotFoundError",
+    "ArtifactSchemaError",
+    "PosteriorPredictor",
+    "load_artifact",
+    "save_artifact",
+    "serve_mesh",
+]

@@ -1,0 +1,243 @@
+"""Versioned posterior serving artifact: what ``BPMFEngine.export()`` writes.
+
+An artifact is everything a serving process needs to answer rating queries
+without re-running MCMC (smurff-style deployment, arXiv:2004.02561):
+
+* posterior-mean factors ``U_mean`` / ``V_mean`` (the plug-in predictive
+  mean), averaged over every post-burn-in Gibbs sample,
+* a bounded window of recent per-sweep factor samples ``U_samples`` /
+  ``V_samples`` for predictive-std output,
+* the global mean rating, the clip range, and dataset/model metadata.
+
+Layout (one directory per artifact)::
+
+    <dir>/
+        artifact.json      # schema version + metadata (this module)
+        step_00000000/     # array payload via the checkpoint layer
+            manifest.json  # leaf names/shapes/dtypes
+            U_mean.npy  V_mean.npy  U_samples.npy  V_samples.npy
+        LATEST
+
+The array payload rides on :mod:`repro.checkpoint` so it inherits the atomic
+tmp-dir + rename commit, and ``artifact.json`` is written (atomically) only
+*after* the arrays commit — a killed export never leaves a loadable-looking
+artifact with missing arrays. Damage found at load time surfaces as the
+typed :class:`ArtifactError` hierarchy instead of raw ``json``/``numpy``
+tracebacks (tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import secrets
+
+import numpy as np
+
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointSchemaError,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+SERVE_ARTIFACT_VERSION = 1
+"""Current artifact schema version; bump on any layout/metadata change."""
+
+_ARTIFACT_JSON = "artifact.json"
+_ARRAYS_STEP = 0
+ARRAY_KEYS = ("U_mean", "V_mean", "U_samples", "V_samples")
+"""Leaf names of the array payload, in manifest order."""
+
+
+class ArtifactError(RuntimeError):
+    """Base class for serving-artifact load failures (typed, never a raw
+    ``json``/``numpy``/pickle traceback)."""
+
+
+class ArtifactNotFoundError(ArtifactError, FileNotFoundError):
+    """The directory does not contain a committed serving artifact."""
+
+
+class ArtifactCorruptError(ArtifactError):
+    """The artifact exists but is damaged: unparsable ``artifact.json``,
+    missing/truncated array files, or a broken checkpoint payload."""
+
+
+class ArtifactSchemaError(ArtifactError):
+    """The artifact is readable but does not match this code's schema:
+    unsupported version, missing metadata keys, or array shapes that
+    contradict the metadata."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactMeta:
+    """Metadata block of a serving artifact (``artifact.json``).
+
+    Attributes:
+        num_users: Row count of the factorized rating matrix.
+        num_movies: Column count of the factorized rating matrix.
+        K: Latent rank of the exported factors.
+        mean_rating: Global training mean re-added to every prediction.
+        min_rating: Lower clip bound for served predictions.
+        max_rating: Upper clip bound for served predictions.
+        num_mean_samples: Post-burn-in Gibbs samples averaged into
+            ``U_mean`` / ``V_mean``; 0 means the export fell back to the
+            last raw sample (no burn-in completed).
+        num_kept_samples: Retained per-sweep factor samples (the leading
+            axis of ``U_samples`` / ``V_samples``); 0 disables
+            predictive-std output.
+        backend: Backend registry name that produced the posterior.
+        num_sweeps_done: Completed Gibbs sweeps at export time.
+        seed: ``RunConfig.seed`` of the producing run (split + sampler).
+        version: Artifact schema version (``SERVE_ARTIFACT_VERSION``).
+    """
+
+    num_users: int
+    num_movies: int
+    K: int
+    mean_rating: float
+    min_rating: float
+    max_rating: float
+    num_mean_samples: int
+    num_kept_samples: int
+    backend: str
+    num_sweeps_done: int
+    seed: int
+    version: int = SERVE_ARTIFACT_VERSION
+
+    def to_json(self) -> dict:
+        """Plain-dict form written to ``artifact.json``."""
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(payload: object) -> "ArtifactMeta":
+        """Validate and parse an ``artifact.json`` payload.
+
+        Args:
+            payload: Decoded JSON value.
+
+        Returns:
+            The parsed metadata.
+
+        Raises:
+            ArtifactSchemaError: On a non-dict payload, an unsupported
+                ``version``, or missing/ill-typed metadata keys.
+        """
+        if not isinstance(payload, dict):
+            raise ArtifactSchemaError(
+                f"artifact.json must hold an object, got {type(payload).__name__}"
+            )
+        version = payload.get("version")
+        if version != SERVE_ARTIFACT_VERSION:
+            raise ArtifactSchemaError(
+                f"unsupported artifact version {version!r} "
+                f"(this build reads version {SERVE_ARTIFACT_VERSION})"
+            )
+        fields = {f.name: f for f in dataclasses.fields(ArtifactMeta)}
+        missing = sorted(set(fields) - set(payload))
+        if missing:
+            raise ArtifactSchemaError(f"artifact.json missing keys: {missing}")
+        kw = {}
+        for name, field in fields.items():
+            val = payload[name]
+            want = field.type if isinstance(field.type, type) else {
+                "int": int, "float": float, "str": str
+            }.get(str(field.type))
+            if want is float and isinstance(val, int):
+                val = float(val)
+            if want is not None and not isinstance(val, want):
+                raise ArtifactSchemaError(
+                    f"artifact.json key {name!r}: expected {want.__name__}, "
+                    f"got {type(val).__name__}"
+                )
+            kw[name] = val
+        return ArtifactMeta(**kw)
+
+
+def _expected_shapes(meta: ArtifactMeta) -> dict[str, tuple[int, ...]]:
+    S = meta.num_kept_samples
+    return {
+        "U_mean": (meta.num_users, meta.K),
+        "V_mean": (meta.num_movies, meta.K),
+        "U_samples": (S, meta.num_users, meta.K),
+        "V_samples": (S, meta.num_movies, meta.K),
+    }
+
+
+def save_artifact(directory: str, meta: ArtifactMeta, arrays: dict[str, np.ndarray]) -> str:
+    """Write a serving artifact: arrays first (atomic), metadata last.
+
+    Args:
+        directory: Artifact directory (created if needed). Re-exporting
+            into the same directory replaces the artifact.
+        meta: Metadata block; array shapes must agree with it.
+        arrays: Exactly the :data:`ARRAY_KEYS` leaves, host numpy.
+
+    Returns:
+        ``directory``.
+
+    Raises:
+        ValueError: If ``arrays`` has the wrong key set or shapes that
+            contradict ``meta`` (producer-side bug, not a typed load error).
+    """
+    if set(arrays) != set(ARRAY_KEYS):
+        raise ValueError(
+            f"artifact arrays must be exactly {ARRAY_KEYS}, got {sorted(arrays)}"
+        )
+    for name, want in _expected_shapes(meta).items():
+        got = tuple(np.asarray(arrays[name]).shape)
+        if got != want:
+            raise ValueError(f"artifact array {name}: shape {got} != {want} from meta")
+    os.makedirs(directory, exist_ok=True)
+    save_checkpoint(directory, _ARRAYS_STEP, {k: np.asarray(arrays[k]) for k in ARRAY_KEYS})
+    tmp = os.path.join(directory, f".{_ARTIFACT_JSON}-{secrets.token_hex(4)}")
+    with open(tmp, "w") as f:
+        json.dump(meta.to_json(), f, indent=1)
+    os.replace(tmp, os.path.join(directory, _ARTIFACT_JSON))
+    return directory
+
+
+def load_artifact(directory: str) -> tuple[ArtifactMeta, dict[str, np.ndarray]]:
+    """Load and validate a serving artifact.
+
+    Args:
+        directory: Directory previously written by :func:`save_artifact`
+            (or :meth:`repro.bpmf.BPMFEngine.export`).
+
+    Returns:
+        ``(meta, arrays)`` with arrays as host numpy in the shapes
+        promised by ``meta``.
+
+    Raises:
+        ArtifactNotFoundError: No ``artifact.json`` under ``directory``.
+        ArtifactCorruptError: Unparsable metadata, or a missing/truncated
+            array payload.
+        ArtifactSchemaError: Version/metadata/shape drift.
+    """
+    meta_path = os.path.join(directory, _ARTIFACT_JSON)
+    if not os.path.exists(meta_path):
+        raise ArtifactNotFoundError(f"no serving artifact under {directory!r}")
+    try:
+        with open(meta_path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        raise ArtifactCorruptError(f"unreadable {meta_path}: {e}") from e
+    meta = ArtifactMeta.from_json(payload)
+
+    target = {k: np.zeros((0,), np.float32) for k in ARRAY_KEYS}
+    try:
+        tree = restore_checkpoint(directory, target, step=_ARRAYS_STEP)
+    except CheckpointSchemaError as e:
+        raise ArtifactSchemaError(f"artifact array payload: {e}") from e
+    except (CheckpointError, FileNotFoundError) as e:
+        raise ArtifactCorruptError(f"artifact array payload: {e}") from e
+    arrays = {k: np.asarray(v) for k, v in tree.items()}
+    for name, want in _expected_shapes(meta).items():
+        got = tuple(arrays[name].shape)
+        if got != want:
+            raise ArtifactSchemaError(
+                f"artifact array {name}: shape {got} contradicts metadata {want}"
+            )
+    return meta, arrays

@@ -1,7 +1,7 @@
 from repro.training.losses import lm_loss, total_loss
 from repro.training.optimizer import AdamW, OptState, warmup_cosine
 from repro.training.train import TrainState, make_train_step, init_train_state
-from repro.training.serve import make_prefill_step, make_decode_step
+from repro.training.lm_serve import make_prefill_step, make_decode_step
 
 __all__ = [
     "lm_loss",

@@ -1,0 +1,92 @@
+"""LM serving steps: prefill (prompt -> cache) and decode (one token / step).
+
+Moved here from ``repro.training.serve`` when that module was repurposed for
+BPMF posterior-mean serving (the repo's actual workload — see
+:mod:`repro.serve`); these builders remain only for the LM dry-run/roofline
+tooling (``repro.launch.dryrun``).
+
+``decode_step`` is what the ``decode_32k`` / ``long_500k`` dry-run shapes
+lower: one new token against a seq_len-deep cache. Sampling is greedy or
+temperature-categorical; the sampled token is returned so a serving loop is
+just ``lax.fori_loop`` / host loop over this pure function.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import LMModel
+from repro.models.module import SERVE_RULES, ShardingCtx, ShardingRules, resolve_spec
+
+Tree = Any
+
+
+def make_prefill_step(model: LMModel, rules: ShardingRules = SERVE_RULES, mesh: Optional[Mesh] = None):
+    ctx = ShardingCtx(mesh=mesh, rules=rules) if mesh is not None else ShardingCtx()
+
+    def prefill_step(params: Tree, inputs: jax.Array, cache: Tree) -> tuple[jax.Array, Tree]:
+        """(params, prompt [B,L], zero cache) -> (last logits [B,1,V], cache')."""
+        return model.prefill(params, inputs, cache, ctx=ctx)
+
+    return prefill_step
+
+
+def make_decode_step(
+    model: LMModel,
+    rules: ShardingRules = SERVE_RULES,
+    mesh: Optional[Mesh] = None,
+    temperature: float = 0.0,
+):
+    ctx = ShardingCtx(mesh=mesh, rules=rules) if mesh is not None else ShardingCtx()
+
+    def decode_step(
+        params: Tree,
+        tokens: jax.Array,  # [B, 1] int32 — last sampled tokens
+        cache: Tree,
+        pos: jax.Array,  # [] int32 — absolute position of this token
+        key: jax.Array,
+    ) -> tuple[jax.Array, Tree]:
+        """Returns (next_tokens [B, 1], cache')."""
+        logits, cache = model.decode(params, tokens, cache, pos[None], ctx=ctx)
+        last = logits[:, -1, :]
+        if temperature > 0:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    return decode_step
+
+
+def greedy_generate(
+    model: LMModel,
+    params: Tree,
+    prompt: jax.Array,  # [B, L] int32
+    steps: int,
+    max_len: int,
+    rules: ShardingRules = SERVE_RULES,
+    mesh: Optional[Mesh] = None,
+) -> jax.Array:
+    """Convenience loop for the examples: prefill then greedy decode."""
+    B, L = prompt.shape
+    cache = model.init_cache(B, max_len)
+    prefill = jax.jit(make_prefill_step(model, rules, mesh))
+    decode = jax.jit(make_decode_step(model, rules, mesh))
+    logits, cache = prefill(params, prompt, cache)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    key = jax.random.key(0)
+    for t in range(steps - 1):
+        tok, cache = decode(params, tok, cache, jnp.asarray(L + t, jnp.int32), key)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def serve_input_specs(model: LMModel, rules: ShardingRules, mesh: Mesh, batch: int):
+    """PartitionSpecs for the decode-step token inputs."""
+    tok = resolve_spec((batch, 1), ("batch", None), rules, mesh)
+    return tok

@@ -13,6 +13,15 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "multidevice: runs a subprocess with forced host devices")
 
 
+def pytest_collection_modifyitems(config, items):
+    """Every multidevice (subprocess) test is also ``slow``, so
+    ``pytest -m "not slow"`` / ``scripts/test.sh -m "not slow"`` deselects
+    the whole fresh-interpreter tier in one flag."""
+    for item in items:
+        if item.get_closest_marker("multidevice") and not item.get_closest_marker("slow"):
+            item.add_marker(pytest.mark.slow)
+
+
 def optional_hypothesis():
     """``(given, settings, st)`` — real hypothesis, or skipping stubs.
 

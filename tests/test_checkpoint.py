@@ -8,7 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointManager,
+    CheckpointSchemaError,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
 
 
 def _tree(key):
@@ -77,3 +85,65 @@ def test_missing_leaf_raises(tmp_path):
     bigger = {**tree, "extra": jnp.zeros((3,))}
     with pytest.raises(ValueError, match="missing leaves"):
         restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: bigger))
+    # the typed spelling of the same failure (schema drift)
+    with pytest.raises(CheckpointSchemaError):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: bigger))
+
+
+# ---------- damage surfaces as typed errors, not raw np/json tracebacks ----------
+
+
+def test_truncated_leaf_raises_typed(tmp_path):
+    tree = _tree(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 1, tree)
+    with open(tmp_path / "step_00000001" / "params__w.npy", "r+b") as f:
+        f.truncate(16)
+    with pytest.raises(CheckpointCorruptError, match="params__w"):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+
+
+def test_deleted_leaf_raises_typed(tmp_path):
+    tree = _tree(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 1, tree)
+    os.remove(tmp_path / "step_00000001" / "opt__mu.npy")
+    with pytest.raises(CheckpointCorruptError, match="opt__mu"):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+
+
+def test_garbage_manifest_raises_typed(tmp_path):
+    tree = _tree(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 1, tree)
+    with open(tmp_path / "step_00000001" / "manifest.json", "w") as f:
+        f.write("]]not json[[")
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+
+
+def test_manifest_without_leaf_table_raises_typed(tmp_path):
+    tree = _tree(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 1, tree)
+    with open(tmp_path / "step_00000001" / "manifest.json", "w") as f:
+        f.write('{"step": 1}')
+    with pytest.raises(CheckpointCorruptError, match="leaf table"):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+
+
+def test_garbage_latest_pointer_raises_typed(tmp_path):
+    tree = _tree(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 1, tree)
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("not-a-step")
+    with pytest.raises(CheckpointCorruptError, match="LATEST"):
+        latest_step(str(tmp_path))
+    # all typed errors share one catchable base
+    assert issubclass(CheckpointCorruptError, CheckpointError)
+    assert issubclass(CheckpointSchemaError, CheckpointError)
+
+
+def test_absent_step_dir_still_not_found(tmp_path):
+    """A directory with no checkpoint at the requested step stays a plain
+    FileNotFoundError — 'not there' is not 'damaged'."""
+    tree = _tree(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 1, tree)
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree), step=9)

@@ -1,0 +1,100 @@
+"""Statistical regression harness for the posterior across all backends.
+
+Three invariants per backend (sequential / ring / allgather / ring_async),
+on one seeded synthetic problem, tier-1 fast and hypothesis-free:
+
+1. the posterior-predictive RMSE beats the column-mean baseline — the
+   sampler must extract low-rank structure, not just the per-movie bias;
+2. the RMSE sits inside a recorded tolerance band, so silent numerical
+   regressions (a broken prior update, a dropped burn-in gate) fail loudly
+   rather than drifting;
+3. served predictions (export -> PosteriorPredictor) agree with
+   ``engine.predict()`` on a held-out batch to fp tolerance — the
+   acceptance bar for the serving round-trip.
+
+The runs execute in-process on whatever device count the main process has
+(scripts/test.sh forces 8); the recorded band carries the cross-backend /
+cross-mesh reduction-order slack observed in the parity tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+from repro.data.sparse import train_test_split
+
+BACKENDS = ("sequential", "ring", "allgather", "ring_async")
+
+# recorded on the seeded problem below (identical at 1 and 8 host devices);
+# the band is ~25x wider than the observed cross-backend spread (<=1e-3)
+RMSE_BAND = (0.70, 0.82)
+_RECORDED_RMSE = 0.7602  # for the failure message
+
+
+def _cfg(**kw) -> BPMFConfig:
+    base = dict(
+        K=8, num_sweeps=10, burn_in=3, bucket_pads=(8, 32, 128),
+        keep_factor_samples=4,
+    )
+    base.update(kw)
+    return BPMFConfig().replace(**base)
+
+
+def _coo():
+    return load_dataset(
+        "synthetic", num_users=150, num_movies=80, nnz=4000, noise_std=0.3, seed=7
+    )
+
+
+def _column_mean_baseline(coo, cfg) -> tuple[float, np.ndarray, np.ndarray]:
+    """(baseline RMSE, test rows, test cols) on the engine's own split."""
+    train, test = train_test_split(coo, cfg.run.test_fraction, cfg.run.seed)
+    gmean = float(train.vals.mean())
+    col_sum = np.zeros(coo.num_movies)
+    col_cnt = np.zeros(coo.num_movies)
+    np.add.at(col_sum, train.cols, train.vals.astype(np.float64))
+    np.add.at(col_cnt, train.cols, 1)
+    col_mean = np.where(col_cnt > 0, col_sum / np.maximum(col_cnt, 1), gmean)
+    rmse = float(np.sqrt(np.mean((col_mean[test.cols] - test.vals) ** 2)))
+    return rmse, test.rows, test.cols
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_posterior_quality_and_serving_agreement(tmp_path, name):
+    coo = _coo()
+    cfg = _cfg(name=name)
+    engine = BPMFEngine(cfg).fit(coo)
+    baseline, rows, cols = _column_mean_baseline(coo, cfg)
+
+    # 1. beats the column-mean baseline with real margin
+    assert engine.rmse < 0.95 * baseline, (
+        f"{name}: posterior-predictive RMSE {engine.rmse:.4f} does not beat "
+        f"the column-mean baseline {baseline:.4f}"
+    )
+
+    # 2. inside the recorded tolerance band
+    lo, hi = RMSE_BAND
+    assert lo < engine.rmse < hi, (
+        f"{name}: RMSE {engine.rmse:.4f} left the recorded band "
+        f"[{lo}, {hi}] (recorded {_RECORDED_RMSE})"
+    )
+
+    # 3. served == in-process on a held-out batch (acceptance: <= 1e-6)
+    artifact = engine.export(str(tmp_path / name))
+    from repro.serve import PosteriorPredictor
+
+    served = PosteriorPredictor.load(artifact).predict(rows, cols)
+    want = engine.predict(rows, cols)
+    np.testing.assert_allclose(served, want, atol=1e-6, rtol=0)
+    # same jitted program + bit-identical round-tripped arrays: exact
+    np.testing.assert_array_equal(served, want)
+
+
+def test_backends_agree_on_final_rmse():
+    """The band is shared across backends because the samplers agree; pin
+    that premise so a single-backend drift can't hide inside the band."""
+    coo = _coo()
+    rmses = {n: BPMFEngine(_cfg(name=n)).fit(coo).rmse for n in BACKENDS}
+    spread = max(rmses.values()) - min(rmses.values())
+    assert spread < 1e-3, rmses

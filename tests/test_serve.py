@@ -1,0 +1,382 @@
+"""Serving subsystem tests: artifact round-trip, predictor semantics,
+typed load failures, and the train -> export -> serve CLI round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+from repro.serve import (
+    ARRAY_KEYS,
+    SERVE_ARTIFACT_VERSION,
+    ArtifactCorruptError,
+    ArtifactMeta,
+    ArtifactNotFoundError,
+    ArtifactSchemaError,
+    PosteriorPredictor,
+    load_artifact,
+    save_artifact,
+)
+
+
+def _cfg(**kw) -> BPMFConfig:
+    base = dict(K=6, num_sweeps=5, burn_in=1, bucket_pads=(8, 32, 128),
+                keep_factor_samples=3)
+    base.update(kw)
+    return BPMFConfig().replace(**base)
+
+
+def _coo(seed: int = 3):
+    return load_dataset(
+        "synthetic", num_users=90, num_movies=45, nnz=1000, noise_std=0.3, seed=seed
+    )
+
+
+@pytest.fixture(scope="module")
+def fitted(tmp_path_factory):
+    """One fitted engine + exported artifact shared by the read-only tests."""
+    engine = BPMFEngine(_cfg()).fit(_coo())
+    path = str(tmp_path_factory.mktemp("serve") / "artifact")
+    engine.export(path)
+    return engine, path
+
+
+# ---------- round-trip + predictor semantics ----------
+
+
+def test_artifact_roundtrip_bitwise(fitted):
+    engine, path = fitted
+    meta, arrays = load_artifact(path)
+    want_meta, want_arrays = engine._artifact_payload()
+    assert meta == want_meta
+    assert meta.version == SERVE_ARTIFACT_VERSION
+    assert meta.num_mean_samples == 4  # sweeps 2..5 post burn-in
+    assert meta.num_kept_samples == 3
+    for k in ARRAY_KEYS:
+        np.testing.assert_array_equal(arrays[k], want_arrays[k])
+
+
+def test_served_predictions_match_engine(fitted):
+    engine, path = fitted
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 90, 33)
+    cols = rng.integers(0, 45, 33)
+    served = PosteriorPredictor.load(path).predict(rows, cols)
+    want = engine.predict(rows, cols)
+    np.testing.assert_array_equal(served, want)  # same jitted program
+    lo, hi = engine.backend.rating_range
+    assert served.shape == (33,)
+    assert np.all(served >= lo) and np.all(served <= hi)
+
+
+def test_predictive_std(fitted):
+    engine, path = fitted
+    predictor = PosteriorPredictor.load(path)
+    preds, std = predictor.predict([0, 1, 2], [3, 4, 5], return_std=True)
+    assert preds.shape == std.shape == (3,)
+    assert np.all(np.isfinite(std)) and np.all(std >= 0)
+    p2, s2 = engine.predict([0, 1, 2], [3, 4, 5], return_std=True)
+    np.testing.assert_array_equal(preds, p2)
+    np.testing.assert_array_equal(std, s2)
+
+
+def test_top_k(fitted):
+    engine, path = fitted
+    predictor = PosteriorPredictor.load(path)
+    ids, scores = predictor.top_k(7, 5)
+    assert ids.shape == scores.shape == (5,)
+    assert np.all(scores[:-1] >= scores[1:])  # descending
+    # top-k scores are the predictions for those movies (matmul vs
+    # multiply-reduce contraction: fp tolerance, not bitwise)
+    np.testing.assert_allclose(
+        scores, predictor.predict(np.full(5, 7), ids), atol=1e-6, rtol=0
+    )
+    # batched form agrees with the scalar form row-wise
+    ids_b, scores_b = predictor.top_k(np.array([7, 11]), 5)
+    assert ids_b.shape == scores_b.shape == (2, 5)
+    np.testing.assert_array_equal(ids_b[0], ids)
+    # k is clamped to the catalog
+    ids_all, _ = predictor.top_k(7, 10_000)
+    assert ids_all.shape == (45,)
+    assert sorted(ids_all.tolist()) == list(range(45))
+
+
+def test_predict_validates_queries(fitted):
+    _, path = fitted
+    predictor = PosteriorPredictor.load(path)
+    with pytest.raises(ValueError, match="user ids"):
+        predictor.predict([90], [0])
+    with pytest.raises(ValueError, match="movie ids"):
+        predictor.predict([0], [-1])
+    with pytest.raises(ValueError, match="batch mismatch"):
+        predictor.predict([0, 1], [0])
+    with pytest.raises(ValueError, match="k >= 1"):
+        predictor.top_k(0, 0)
+
+
+def test_std_requires_kept_samples(tmp_path):
+    engine = BPMFEngine(_cfg(keep_factor_samples=0)).fit(_coo())
+    path = engine.export(str(tmp_path / "nostd"))
+    meta, arrays = load_artifact(path)
+    assert meta.num_kept_samples == 0 and arrays["U_samples"].shape[0] == 0
+    predictor = PosteriorPredictor.load(path)
+    with pytest.raises(ValueError, match="keep_factor_samples"):
+        predictor.predict([0], [0], return_std=True)
+    predictor.predict([0], [0])  # mean path unaffected
+
+
+def test_export_before_burn_in_falls_back_to_sample(tmp_path):
+    engine = BPMFEngine(_cfg(num_sweeps=1, burn_in=5)).fit(_coo())
+    path = engine.export(str(tmp_path / "raw"))
+    meta, arrays = load_artifact(path)
+    assert meta.num_mean_samples == 0 and meta.num_kept_samples == 0
+    U, _ = engine.factors()
+    np.testing.assert_array_equal(arrays["U_mean"], U)
+
+
+def test_resumed_run_exports_identical_artifact(tmp_path):
+    """Checkpoint save/restore must not perturb the accumulated posterior:
+    an interrupted+resumed run exports bitwise the artifact of an
+    uninterrupted one."""
+    coo = _coo(seed=5)
+    cfg = _cfg(num_sweeps=6, checkpoint_dir=str(tmp_path / "ckpt"))
+    full = BPMFEngine(cfg).fit(coo)
+    full_path = full.export(str(tmp_path / "full"))
+
+    interrupted = BPMFEngine(cfg)
+    it = interrupted.sample(coo)
+    for _ in range(3):
+        next(it)
+    interrupted.save()
+    del interrupted, it
+
+    resumed = BPMFEngine(cfg)
+    resumed.restore(coo)
+    resumed.fit()
+    resumed_path = resumed.export(str(tmp_path / "resumed"))
+
+    m1, a1 = load_artifact(full_path)
+    m2, a2 = load_artifact(resumed_path)
+    assert m1 == m2
+    for k in ARRAY_KEYS:
+        np.testing.assert_array_equal(a1[k], a2[k], err_msg=k)
+
+
+def test_restore_pre_serving_checkpoint(tmp_path):
+    """Checkpoints written before the serving subsystem (no 'posterior'
+    subtree) must still resume; the accumulator restarts empty and export
+    reflects only post-resume sweeps."""
+    coo = _coo(seed=8)
+    cfg = _cfg(num_sweeps=4, checkpoint_dir=str(tmp_path / "ckpt"))
+    engine = BPMFEngine(cfg)
+    it = engine.sample(coo)
+    for _ in range(2):
+        next(it)
+    hist = np.asarray(
+        [[m.rmse_sample, m.rmse_avg, m.sweep] for m in engine.history], np.float32
+    )
+    # simulate the old checkpoint schema: state/pred/history only
+    engine._manager().save(
+        2, {"state": engine._state, "pred": engine._pred, "history": hist}
+    )
+    del engine, it
+
+    resumed = BPMFEngine(cfg)
+    assert resumed.restore(coo) == 2
+    resumed.fit()
+    meta, arrays = load_artifact(resumed.export(str(tmp_path / "art")))
+    assert meta.num_mean_samples == 2  # sweeps 3..4 only (pre-resume lost)
+    assert np.all(np.isfinite(arrays["U_mean"]))
+
+
+# ---------- typed load failures ----------
+
+
+def _tamper(path: str, name: str, mutate) -> None:
+    full = os.path.join(path, "step_00000000", name)
+    mutate(full)
+
+
+def test_missing_artifact_raises(tmp_path):
+    with pytest.raises(ArtifactNotFoundError):
+        load_artifact(str(tmp_path / "nope"))
+
+
+def test_corrupt_artifact_json(fitted, tmp_path):
+    _, path = fitted
+    import shutil
+
+    broken = str(tmp_path / "broken")
+    shutil.copytree(path, broken)
+    with open(os.path.join(broken, "artifact.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(ArtifactCorruptError, match="unreadable"):
+        load_artifact(broken)
+
+
+def test_version_drift_raises(fitted, tmp_path):
+    _, path = fitted
+    import shutil
+
+    drift = str(tmp_path / "drift")
+    shutil.copytree(path, drift)
+    meta_path = os.path.join(drift, "artifact.json")
+    with open(meta_path) as f:
+        payload = json.load(f)
+    payload["version"] = SERVE_ARTIFACT_VERSION + 1
+    with open(meta_path, "w") as f:
+        json.dump(payload, f)
+    with pytest.raises(ArtifactSchemaError, match="version"):
+        load_artifact(drift)
+    # missing metadata key is schema drift too
+    del payload["version"], payload["mean_rating"]
+    payload["version"] = SERVE_ARTIFACT_VERSION
+    with open(meta_path, "w") as f:
+        json.dump(payload, f)
+    with pytest.raises(ArtifactSchemaError, match="mean_rating"):
+        load_artifact(drift)
+
+
+def test_truncated_array_raises_typed(fitted, tmp_path):
+    _, path = fitted
+    import shutil
+
+    broken = str(tmp_path / "trunc")
+    shutil.copytree(path, broken)
+    _tamper(broken, "U_mean.npy", lambda p: open(p, "r+b").truncate(16))
+    with pytest.raises(ArtifactCorruptError, match="U_mean"):
+        load_artifact(broken)
+
+
+def test_missing_array_raises_typed(fitted, tmp_path):
+    _, path = fitted
+    import shutil
+
+    broken = str(tmp_path / "gone")
+    shutil.copytree(path, broken)
+    _tamper(broken, "V_mean.npy", os.remove)
+    with pytest.raises(ArtifactCorruptError, match="V_mean"):
+        load_artifact(broken)
+
+
+def test_shape_drift_raises_schema(fitted, tmp_path):
+    _, path = fitted
+    import shutil
+
+    broken = str(tmp_path / "shape")
+    shutil.copytree(path, broken)
+    _tamper(broken, "U_mean.npy", lambda p: np.save(p, np.zeros((2, 2), np.float32)))
+    with pytest.raises(ArtifactSchemaError, match="U_mean"):
+        load_artifact(broken)
+
+
+def test_save_artifact_validates_payload(tmp_path):
+    meta = ArtifactMeta(
+        num_users=4, num_movies=3, K=2, mean_rating=0.0, min_rating=0.0,
+        max_rating=1.0, num_mean_samples=1, num_kept_samples=0, backend="sequential",
+        num_sweeps_done=1, seed=0,
+    )
+    arrays = {
+        "U_mean": np.zeros((4, 2), np.float32),
+        "V_mean": np.zeros((3, 2), np.float32),
+        "U_samples": np.zeros((0, 4, 2), np.float32),
+        "V_samples": np.zeros((0, 3, 2), np.float32),
+    }
+    save_artifact(str(tmp_path / "ok"), meta, arrays)
+    with pytest.raises(ValueError, match="shape"):
+        save_artifact(
+            str(tmp_path / "bad"), meta, {**arrays, "U_mean": np.zeros((5, 2), np.float32)}
+        )
+    with pytest.raises(ValueError, match="exactly"):
+        save_artifact(str(tmp_path / "bad2"), meta, {"U_mean": arrays["U_mean"]})
+
+
+# ---------- CLI round-trip (train -> export -> serve) ----------
+
+
+def _run_cli(argv: list[str], stdin: str | None = None) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return subprocess.run(
+        [sys.executable, "-m", *argv],
+        env=env, capture_output=True, text=True, timeout=600, input=stdin,
+    )
+
+
+@pytest.mark.slow
+def test_cli_train_export_serve_roundtrip(tmp_path):
+    """python -m repro.launch.bpmf --export-artifact -> python -m
+    repro.launch.serve returns finite predictions matching an in-process
+    restore of the same artifact."""
+    artifact = str(tmp_path / "artifact")
+    train = _run_cli([
+        "repro.launch.bpmf", "--backend", "sequential", "--dataset", "synthetic",
+        "--sweeps", "3", "--burn-in", "1", "--K", "4",
+        "--users", "80", "--movies", "40", "--nnz", "800",
+        "--export-artifact", artifact,
+    ])
+    assert train.returncode == 0, train.stderr
+    assert "exported serving artifact" in train.stdout
+
+    rows, cols = [0, 5, 11], [1, 7, 39]
+    one_shot = _run_cli([
+        "repro.launch.serve", "--artifact", artifact,
+        "--rows", ",".join(map(str, rows)), "--cols", ",".join(map(str, cols)),
+        "--std",
+    ])
+    assert one_shot.returncode == 0, one_shot.stderr
+    resp = json.loads(one_shot.stdout)
+    got = np.asarray(resp["predictions"], np.float32)
+    assert np.all(np.isfinite(got)) and np.all(np.isfinite(resp["std"]))
+
+    want, want_std = PosteriorPredictor.load(artifact).predict(
+        rows, cols, return_std=True
+    )
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=0)
+    np.testing.assert_allclose(np.asarray(resp["std"], np.float32), want_std,
+                               atol=1e-6, rtol=0)
+
+    jsonl = _run_cli(
+        ["repro.launch.serve", "--artifact", artifact, "--jsonl"],
+        stdin=json.dumps({"rows": rows, "cols": cols}) + "\n"
+        + json.dumps({"user": 3, "k": 4}) + "\n"
+        + "definitely not json\n",
+    )
+    assert jsonl.returncode == 0, jsonl.stderr
+    lines = [json.loads(l) for l in jsonl.stdout.splitlines() if l.strip()]
+    assert len(lines) == 3
+    np.testing.assert_allclose(
+        np.asarray(lines[0]["predictions"], np.float32), want, atol=1e-6, rtol=0
+    )
+    assert len(lines[1]["items"]) == 4 and lines[1]["user"] == 3
+    assert "error" in lines[2]  # malformed request does not kill the loop
+
+
+def test_serve_cli_missing_artifact(tmp_path):
+    proc = _run_cli([
+        "repro.launch.serve", "--artifact", str(tmp_path / "none"),
+        "--rows", "0", "--cols", "0",
+    ])
+    assert proc.returncode == 1
+    assert "cannot load artifact" in proc.stderr
+
+
+@pytest.mark.slow
+def test_serve_cli_invalid_query_is_clean(fitted):
+    """One-shot mode turns invalid queries into an error JSON + exit 1,
+    never a traceback (same contract as the JSONL loop)."""
+    _, artifact = fitted
+    proc = _run_cli([
+        "repro.launch.serve", "--artifact", artifact,
+        "--rows", "0,99999", "--cols", "0,1",
+    ])
+    assert proc.returncode == 1, proc.stderr
+    assert "Traceback" not in proc.stderr
+    err = json.loads(proc.stderr.splitlines()[-1])
+    assert "user ids" in err["error"]
