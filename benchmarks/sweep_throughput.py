@@ -1,0 +1,154 @@
+"""Blocked sweep-loop throughput: sweeps/sec and host bytes per sweep.
+
+Measures what the device-resident blocked run loop (DESIGN.md §10) buys
+over the per-sweep host round-trip it replaced, across
+``backends × sweeps_per_block ∈ {1, 4, 8}``:
+
+* ``sweeps_per_sec`` — engine wall-clock after a compile warmup;
+* ``host_bytes_per_sweep`` — bytes the engine actually fetched from device
+  per sweep (the engine's ``host_metric_bytes`` counter: one stacked
+  ``[block, 3]`` f32 metrics array per block, nothing else);
+* ``legacy_emulated`` — the pre-block engine loop, reproduced faithfully:
+  per-sweep dispatch plus a full ``(U, V)`` factor gather to the host after
+  every post-burn-in sweep (what the old host-side posterior accumulator
+  cost). The gap between its ``host_bytes_per_sweep`` and any blocked
+  entry's is ≥ the factor-gather size — the acceptance bar of the refactor.
+
+Bitwise parity across block sizes is re-checked on the gathered factors
+(``parity_ok``). Emits ``experiments/bench/sweep_throughput.json`` (schema
+in experiments/bench/README.md, validated by
+``scripts/check_bench_schema.py sweep_throughput``). Run inside a forced
+multi-device process, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src:. \
+        python -m benchmarks.sweep_throughput --smoke
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result
+
+BLOCK_SIZES = (1, 4, 8)
+BACKENDS = ("sequential", "ring", "ring_async", "allgather")
+
+
+def _fit_timed(cfg, coo):
+    """(engine, seconds) for one fit, compile excluded via a warmup fit."""
+    from repro.bpmf import BPMFEngine
+
+    BPMFEngine(cfg).fit(coo)  # compile
+    engine = BPMFEngine(cfg)
+    engine.prepare(coo)
+    t0 = time.time()
+    engine.fit()
+    return engine, time.time() - t0
+
+
+def _legacy_emulated(cfg, coo):
+    """The pre-block run loop: per-sweep blocks + per-sweep factor gather.
+
+    ``sweeps_per_block=1`` reproduces the old dispatch cadence; the explicit
+    ``engine.factors()`` per post-burn-in sweep reproduces the old host-side
+    posterior accumulation traffic. Bytes are counted from the arrays
+    actually gathered.
+    """
+    from repro.bpmf import BPMFEngine
+
+    cfg = cfg.replace(sweeps_per_block=1)
+    BPMFEngine(cfg).fit(coo)  # compile
+    engine = BPMFEngine(cfg)
+    engine.prepare(coo)
+    gathered = 0
+    t0 = time.time()
+    for m in engine.sample():
+        if int(m.sweep) > cfg.run.burn_in:
+            U, V = engine.factors()
+            gathered += U.nbytes + V.nbytes
+    t = time.time() - t0
+    return engine, t, gathered + engine.host_metric_bytes
+
+
+def run(smoke: bool = False) -> dict:
+    from repro.bpmf import BPMFConfig, load_dataset
+
+    users = 400 if smoke else 2_000
+    movies = 200 if smoke else 800
+    nnz = 6_000 if smoke else 80_000
+    K = 8 if smoke else 32
+    sweeps = 8 if smoke else 24
+    burn_in = 2 if smoke else 8
+    coo = load_dataset("synthetic", num_users=users, num_movies=movies, nnz=nnz)
+    base = BPMFConfig().replace(
+        K=K, num_sweeps=sweeps, burn_in=burn_in, keep_factor_samples=4
+    )
+    num_devices = len(jax.devices())
+
+    out: dict = {
+        "devices": num_devices,
+        "smoke": smoke,
+        "workload": {"users": users, "movies": movies, "nnz": nnz,
+                     "K": K, "sweeps": sweeps, "burn_in": burn_in},
+        # what the old loop gathered per post-burn-in sweep: full f32 (U, V)
+        "factor_gather_bytes": (users + movies) * K * 4,
+        "backends": {},
+    }
+
+    parity = True
+    for name in BACKENDS:
+        entries: dict = {}
+        factors0 = None
+        for spb in BLOCK_SIZES:
+            cfg = base.replace(name=name, sweeps_per_block=spb)
+            engine, t = _fit_timed(cfg, coo)
+            if factors0 is None:
+                factors0 = engine.factors()
+            else:
+                U, V = engine.factors()
+                parity = parity and np.array_equal(U, factors0[0]) \
+                    and np.array_equal(V, factors0[1])
+            entries[f"block_{spb}"] = {
+                "sweeps_per_block": spb,
+                "seconds": t,
+                "sweeps_per_sec": sweeps / t,
+                "host_bytes_per_sweep": engine.host_metric_bytes / sweeps,
+                "rmse": engine.rmse,
+            }
+            print(f"[sweep_throughput] {name} block={spb}: {t:.3f}s "
+                  f"({sweeps / t:.2f} sweeps/s, "
+                  f"{engine.host_metric_bytes / sweeps:.0f} B/sweep)")
+        engine, t, legacy_bytes = _legacy_emulated(base.replace(name=name), coo)
+        post = sweeps - burn_in
+        entries["legacy_emulated"] = {
+            "seconds": t,
+            "sweeps_per_sec": sweeps / t,
+            "host_bytes_per_sweep": legacy_bytes / sweeps,
+            "host_bytes_per_post_burn_in_sweep":
+                (legacy_bytes - sweeps * 12) / post + 12,
+            "rmse": engine.rmse,
+        }
+        print(f"[sweep_throughput] {name} legacy: {t:.3f}s "
+              f"({legacy_bytes / sweeps:.0f} B/sweep)")
+        out["backends"][name] = entries
+
+    out["parity_ok"] = parity
+    # acceptance: for block > 1 the per-post-burn-in-sweep host traffic
+    # drops vs the legacy loop by at least the factor-gather size
+    gather = out["factor_gather_bytes"]
+    out["block_transfer_drop_ok"] = all(
+        e["legacy_emulated"]["host_bytes_per_post_burn_in_sweep"]
+        - e[f"block_{spb}"]["host_bytes_per_sweep"] >= gather
+        for e in out["backends"].values()
+        for spb in BLOCK_SIZES
+        if spb > 1
+    )
+    save_result("sweep_throughput", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -118,10 +118,52 @@ def check_serve_latency(payload: dict) -> list[str]:
     return errs
 
 
+def check_sweep_throughput(payload: dict) -> list[str]:
+    """Schema of sweep_throughput.json (blocked run-loop host traffic)."""
+    errs: list[str] = []
+    if not isinstance(payload.get("devices"), int) or payload.get("devices", 0) < 1:
+        errs.append("devices: missing or < 1")
+    gather = payload.get("factor_gather_bytes")
+    if not isinstance(gather, (int, float)) or gather <= 0:
+        errs.append("factor_gather_bytes: missing or non-positive")
+    for k in ("parity_ok", "block_transfer_drop_ok"):
+        if not isinstance(payload.get(k), bool):
+            errs.append(f"{k}: missing or non-bool")
+        elif not payload[k]:
+            errs.append(f"{k}: False — blocked loop regressed")
+    backends = payload.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        errs.append("backends: missing or empty")
+        return errs
+    needed = ("seconds", "sweeps_per_sec", "host_bytes_per_sweep", "rmse")
+    for name, entries in backends.items():
+        if not isinstance(entries, dict) or "legacy_emulated" not in entries:
+            errs.append(f"backends[{name}]: needs block_* and legacy_emulated entries")
+            continue
+        blocks = [k for k in entries if k.startswith("block_")]
+        if not any(k != "block_1" for k in blocks):
+            errs.append(f"backends[{name}]: needs at least one block_>1 entry")
+        for label, e in entries.items():
+            where = f"backends[{name}].{label}"
+            for k in needed:
+                if not isinstance(e.get(k), (int, float)) or e.get(k, 0) <= 0:
+                    errs.append(f"{where}.{k}: missing or non-positive")
+        legacy = entries["legacy_emulated"]
+        if not isinstance(
+            legacy.get("host_bytes_per_post_burn_in_sweep"), (int, float)
+        ):
+            errs.append(
+                f"backends[{name}].legacy_emulated."
+                "host_bytes_per_post_burn_in_sweep: missing or non-numeric"
+            )
+    return errs
+
+
 CHECKERS = {
     "fig2_item_update": check_fig2_item_update,
     "fig5_overlap": check_fig5_overlap,
     "serve_latency": check_serve_latency,
+    "sweep_throughput": check_sweep_throughput,
 }
 
 

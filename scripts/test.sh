@@ -16,6 +16,10 @@
 #   scripts/test.sh --serve-smoke       # + train 2 sweeps -> export artifact
 #                                       #   -> serve one-shot + JSONL queries
 #                                       #   -> serve_latency --smoke + schema
+#   scripts/test.sh --block-smoke       # + 2-block ring run (8 sweeps,
+#                                       #   sweeps_per_block=4) -> export ->
+#                                       #   serve one-shot; sweep_throughput
+#                                       #   --smoke + JSON schema check
 #
 # Always runs the public-API docstring-coverage gate
 # (scripts/check_docstrings.py) before pytest.
@@ -30,6 +34,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_SMOKE=0
 AUTOTUNE_SMOKE=0
 SERVE_SMOKE=0
+BLOCK_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
@@ -38,6 +43,8 @@ for a in "$@"; do
     AUTOTUNE_SMOKE=1
   elif [[ "$a" == "--serve-smoke" ]]; then
     SERVE_SMOKE=1
+  elif [[ "$a" == "--block-smoke" ]]; then
+    BLOCK_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -89,6 +96,21 @@ if [[ "$SERVE_SMOKE" == 1 ]]; then
   python -m benchmarks.serve_latency --smoke --artifact "$ART"
   python scripts/check_bench_schema.py serve_latency
   rm -rf "$SERVE_TMP"
+fi
+
+if [[ "$BLOCK_SMOKE" == 1 ]]; then
+  echo "== block smoke: 2-block ring run -> export -> serve one-shot =="
+  BLOCK_TMP="$(mktemp -d)"
+  BART="$BLOCK_TMP/artifact"
+  python -m repro.launch.bpmf --backend ring --dataset synthetic \
+    --sweeps 8 --sweeps-per-block 4 --burn-in 2 --K 4 \
+    --users 80 --movies 40 --nnz 800 \
+    --export-artifact "$BART"
+  python -m repro.launch.serve --artifact "$BART" --rows 0,1,2 --cols 0,1,2 --std
+  echo "== sweep_throughput smoke + schema check =="
+  python -m benchmarks.sweep_throughput --smoke
+  python scripts/check_bench_schema.py sweep_throughput
+  rm -rf "$BLOCK_TMP"
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

@@ -23,15 +23,149 @@ from typing import Callable
 
 import jax
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.bpmf.config import BPMFConfig
 from repro.core import distributed as dist
 from repro.core import gibbs
 from repro.core.gibbs import SweepMetrics
 from repro.core.prediction import PredictionState
+from repro.core.types import PosteriorAccum
 from repro.data.sparse import RatingsCOO, build_bpmf_data
 
 BACKENDS: dict[str, type["Backend"]] = {}
+
+_EMPTY_SUM = np.zeros((0, 0), np.float32)
+_EMPTY_STACK = np.zeros((0, 0, 0), np.float32)
+
+
+def _window_slots(count: int, keep: int, available: int) -> np.ndarray:
+    """Rotating-buffer slots of the most recent samples, oldest first.
+
+    Post-burn-in sample ``i`` lives at slot ``i % keep``; the ``S`` most
+    recent retained samples are global indices ``count - S .. count - 1``.
+    ``available`` caps ``S`` (a restored checkpoint may carry fewer samples
+    than the window holds).
+    """
+    S = min(count, keep, available)
+    return np.arange(count - S, count, dtype=np.int64) % max(keep, 1)
+
+
+def accum_host_tree(
+    accum: PosteriorAccum,
+    u_order: np.ndarray | None = None,
+    v_order: np.ndarray | None = None,
+) -> dict:
+    """Host view of a device accumulator in the PR-4 checkpoint schema.
+
+    Returns the fixed-key ``{"U_sum", "V_sum", "count", "U_samples",
+    "V_samples"}`` dict the ``"posterior"`` checkpoint subtree has always
+    used: sums are ``(0, 0)``-shaped until the first post-burn-in sample,
+    and the sample stacks are chronological (oldest kept draw first) —
+    bitwise what the old host-side accumulator checkpointed, so pre-block
+    checkpoints restore and new checkpoints match old readers.
+
+    Args:
+        accum: Device accumulator (any sharding; gathered here).
+        u_order / v_order: Optional relabeled->original permutations
+            (``plan.part_*.perm``) applied to the item axis, for the
+            distributed backends. Pass both or neither.
+    """
+    if (u_order is None) != (v_order is None):
+        raise ValueError("accum_host_tree: pass both u_order and v_order, or neither")
+    count = int(accum.count)
+    keep = accum.keep
+    if count == 0:
+        U_sum, V_sum = _EMPTY_SUM, _EMPTY_SUM
+    else:
+        U_sum = np.asarray(accum.U_sum)
+        V_sum = np.asarray(accum.V_sum)
+        if u_order is not None:
+            U_sum, V_sum = U_sum[u_order], V_sum[v_order]
+    slots = _window_slots(count, keep, int(accum.filled))
+    if slots.size:
+        Us = np.asarray(accum.U_window)[slots]
+        Vs = np.asarray(accum.V_window)[slots]
+        if u_order is not None:
+            Us, Vs = Us[:, u_order], Vs[:, v_order]
+    else:
+        Us, Vs = _EMPTY_STACK, _EMPTY_STACK
+    return {
+        "U_sum": U_sum,
+        "V_sum": V_sum,
+        "count": np.asarray(count, np.int32),
+        "U_samples": Us,
+        "V_samples": Vs,
+    }
+
+
+def accum_from_host_tree(
+    tree: dict,
+    template: PosteriorAccum,
+    u_scatter: np.ndarray | None = None,
+    v_scatter: np.ndarray | None = None,
+) -> PosteriorAccum:
+    """Rebuild a device accumulator from :func:`accum_host_tree` output.
+
+    Inverse of the host view: chronological sample stacks go back to their
+    rotating-buffer slots (``(count - S + j) % keep``), so a restore at any
+    sweep reproduces bitwise the window an uninterrupted device run holds.
+    Checkpoints written with a different ``keep`` restore the most recent
+    ``min(S, keep)`` samples.
+
+    Args:
+        tree: Host arrays (np or device) in the checkpoint schema.
+        template: Zeroed accumulator in the backend's internal layout
+            (shapes/sharding to restore into).
+        u_scatter / v_scatter: Optional original->relabeled permutations
+            (``plan.part_*.perm``) mapping host rows into shard slots.
+            Pass both or neither.
+    """
+    if (u_scatter is None) != (v_scatter is None):
+        raise ValueError(
+            "accum_from_host_tree: pass both u_scatter and v_scatter, or neither"
+        )
+    count = int(np.asarray(tree["count"]))
+    keep = template.keep
+    shape_u = template.U_sum.shape  # internal layout [M or S*cap, K]
+    shape_v = template.V_sum.shape
+
+    def to_internal(host: np.ndarray, shape, scatter) -> np.ndarray:
+        out = np.zeros(shape, np.float32)
+        host = np.asarray(host, np.float32)
+        if scatter is None:
+            out[: host.shape[0]] = host
+        else:
+            out[scatter] = host
+        return out
+
+    U_sum = np.zeros(shape_u, np.float32)
+    V_sum = np.zeros(shape_v, np.float32)
+    if count:
+        U_sum = to_internal(tree["U_sum"], shape_u, u_scatter)
+        V_sum = to_internal(tree["V_sum"], shape_v, v_scatter)
+    Us = np.asarray(tree["U_samples"], np.float32)
+    Vs = np.asarray(tree["V_samples"], np.float32)
+    U_win = np.zeros((keep,) + shape_u, np.float32)
+    V_win = np.zeros((keep,) + shape_v, np.float32)
+    S = min(Us.shape[0], keep, count)
+    slots = _window_slots(count, keep, S)
+    for j, slot in enumerate(slots):
+        # the stacks hold the last Us.shape[0] draws; take their tail
+        src = Us.shape[0] - S + j
+        U_win[slot] = to_internal(Us[src], shape_u, u_scatter)
+        V_win[slot] = to_internal(Vs[src], shape_v, v_scatter)
+    return PosteriorAccum(
+        U_sum=U_sum,
+        V_sum=V_sum,
+        count=np.asarray(count, np.int32),
+        # only the S slots actually placed are valid: a checkpoint that
+        # retained fewer samples than min(count, keep) (e.g. written with a
+        # smaller keep) must not report zero-filled slots as samples
+        filled=np.asarray(S, np.int32),
+        U_window=U_win,
+        V_window=V_win,
+    )
 
 
 def register_backend(name: str) -> Callable[[type["Backend"]], type["Backend"]]:
@@ -47,9 +181,9 @@ def register_backend(name: str) -> Callable[[type["Backend"]], type["Backend"]]:
 
         @register_backend("ring_traced")
         class TracedRingBackend(DistributedBackend):
-            def sweep(self, key, state, pred):
-                out = super().sweep(key, state, pred)
-                print("sweep done")
+            def sweep_block(self, key, state, pred, accum, block_size):
+                out = super().sweep_block(key, state, pred, accum, block_size)
+                print(f"block of {block_size} sweeps done")
                 return out
 
         BPMFEngine(BPMFConfig().replace(name="ring_traced")).fit(coo)
@@ -121,11 +255,45 @@ class Backend(abc.ABC):
 
     @abc.abstractmethod
     def sweep(self, key: jax.Array, state, pred: PredictionState):
-        """One Gibbs sweep -> (state, pred, SweepMetrics)."""
+        """One Gibbs sweep -> (state, pred, SweepMetrics). Legacy per-sweep
+        dispatch; the engine run loop goes through :meth:`sweep_block`."""
+
+    @abc.abstractmethod
+    def sweep_block(
+        self, key: jax.Array, state, pred: PredictionState,
+        accum: PosteriorAccum, block_size: int,
+    ):
+        """``block_size`` sweeps in one jitted call, no host sync inside.
+
+        The engine's run loop primitive (DESIGN.md §10): posterior and
+        prediction accumulation happen on-device in the block's scan carry.
+
+        Returns:
+            ``(state, pred, accum, metrics)`` — ``metrics`` a
+            ``[block_size, 3]`` f32 device array of per-sweep
+            ``(rmse_sample, rmse_avg, sweep)`` rows.
+        """
 
     @abc.abstractmethod
     def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
         """(U, V) as host arrays in *original* item order."""
+
+    # ------------------------------------------------------------------
+    @abc.abstractmethod
+    def init_accum(self) -> PosteriorAccum:
+        """Zeroed device posterior accumulator in this backend's layout
+        (window depth = ``RunConfig.keep_factor_samples``)."""
+
+    @abc.abstractmethod
+    def accum_host(self, accum: PosteriorAccum) -> dict:
+        """Host view of the accumulator in original item order — the
+        ``"posterior"`` checkpoint subtree schema (see
+        :func:`accum_host_tree`)."""
+
+    @abc.abstractmethod
+    def accum_from_host(self, tree: dict) -> PosteriorAccum:
+        """Rebuild the device accumulator from an :meth:`accum_host` tree
+        (checkpoint restore path)."""
 
     # ------------------------------------------------------------------
     @property
@@ -182,8 +350,29 @@ class SequentialBackend(Backend):
     def sweep(self, key: jax.Array, state, pred: PredictionState):
         return gibbs.gibbs_sweep(key, state, pred, self.data, self.core_cfg)
 
+    def sweep_block(
+        self, key: jax.Array, state, pred: PredictionState,
+        accum: PosteriorAccum, block_size: int,
+    ):
+        return gibbs.gibbs_sweep_block(
+            key, state, pred, accum, self.data, self.core_cfg, block_size
+        )
+
     def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
         return np.asarray(state.U), np.asarray(state.V)
+
+    def init_accum(self) -> PosteriorAccum:
+        return PosteriorAccum.init(
+            self.data.num_users, self.data.num_movies,
+            self.core_cfg.K, self.cfg.run.keep_factor_samples,
+        )
+
+    def accum_host(self, accum: PosteriorAccum) -> dict:
+        return accum_host_tree(accum)
+
+    def accum_from_host(self, tree: dict) -> PosteriorAccum:
+        host = accum_from_host_tree(tree, self.init_accum())
+        return jax.tree_util.tree_map(jax.numpy.asarray, host)
 
     @property
     def num_test(self) -> int:
@@ -245,8 +434,40 @@ class DistributedBackend(Backend):
     def sweep(self, key: jax.Array, state, pred: PredictionState):
         return dist.dist_gibbs_sweep(key, state, pred, self.data, self.core_cfg, self.mesh)
 
+    def sweep_block(
+        self, key: jax.Array, state, pred: PredictionState,
+        accum: PosteriorAccum, block_size: int,
+    ):
+        return dist.dist_gibbs_sweep_block(
+            key, state, pred, accum, self.data, self.core_cfg, self.mesh, block_size
+        )
+
     def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
         return dist.gather_factors(state, self.plan)
+
+    def init_accum(self) -> PosteriorAccum:
+        return dist.init_dist_accum(
+            self.data, self.core_cfg, self.mesh, self.cfg.run.keep_factor_samples
+        )
+
+    def accum_host(self, accum: PosteriorAccum) -> dict:
+        return accum_host_tree(
+            accum,
+            u_order=self.plan.part_users.perm,
+            v_order=self.plan.part_movies.perm,
+        )
+
+    def accum_from_host(self, tree: dict) -> PosteriorAccum:
+        host = accum_from_host_tree(
+            tree,
+            self.init_accum(),
+            u_scatter=self.plan.part_users.perm,
+            v_scatter=self.plan.part_movies.perm,
+        )
+        specs = dist.accum_specs()
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)), host, specs
+        )
 
     @property
     def num_test(self) -> int:
@@ -303,15 +524,21 @@ def run_sequential_prepared(
 
     Kept here so ``core.gibbs.run`` can stay a thin deprecation-safe wrapper
     while the engine owns all new run-loop features (checkpointing,
-    streaming metrics).
+    streaming metrics). Dispatches per sweep through the same blocked scan
+    the engine uses (block size 1), so legacy-loop samples stay bitwise
+    identical to engine runs at any ``sweeps_per_block``.
     """
     k_init, k_run = jax.random.split(key)
     state = gibbs.init_state(k_init, data.num_users, data.num_movies, core_cfg)
     pred_state = PredictionState.init(data.test.rows.shape[0])
+    accum = PosteriorAccum.init(data.num_users, data.num_movies, core_cfg.K, keep=0)
     history: list[SweepMetrics] = []
     for _ in range(core_cfg.num_sweeps):
-        state, pred_state, metrics = gibbs.gibbs_sweep(k_run, state, pred_state, data, core_cfg)
-        history.append(jax.tree_util.tree_map(float, metrics))
+        state, pred_state, accum, rows = gibbs.gibbs_sweep_block(
+            k_run, state, pred_state, accum, data, core_cfg, 1
+        )
+        metrics = SweepMetrics(*(float(v) for v in np.asarray(rows)[0]))
+        history.append(metrics)
         if callback is not None:
             callback(state, metrics)
     return state, pred_state, history

@@ -72,6 +72,16 @@ class RunConfig:
             starts averaging predictions.
         seed: Seeds both the train/test split and the sampler key, so one
             integer pins the whole run.
+        sweeps_per_block: Gibbs sweeps executed per jitted device block
+            (DESIGN.md §10). The engine's run loop dispatches blocks of this
+            many sweeps through one ``lax.scan`` with **no host sync inside
+            the block** — posterior-mean sums, the recent-sample window and
+            the prediction accumulator all fold on-device, and each block
+            returns its per-sweep metrics in a single ``[block, 3]``
+            transfer. ``1`` reproduces the historical per-sweep dispatch
+            cadence; samples and artifacts are bitwise identical at every
+            value. Blocks shrink automatically to land exactly on
+            ``checkpoint_every`` boundaries and the final sweep.
         test_fraction: Held-out fraction for RMSE tracking.
         checkpoint_dir: Where :meth:`BPMFEngine.save` writes; ``None``
             disables checkpointing.
@@ -87,6 +97,7 @@ class RunConfig:
     num_sweeps: int = 50
     burn_in: int = 8
     seed: int = 0  # seeds both the train/test split and the sampler key
+    sweeps_per_block: int = 8  # sweeps per jitted device block (1 = per-sweep)
     test_fraction: float = 0.1
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0  # sweeps between auto-saves; 0 = explicit save() only
@@ -98,6 +109,11 @@ class RunConfig:
             raise ValueError(
                 f"RunConfig.keep_factor_samples must be >= 0, "
                 f"got {self.keep_factor_samples}"
+            )
+        if self.sweeps_per_block < 1:
+            raise ValueError(
+                f"RunConfig.sweeps_per_block must be >= 1, "
+                f"got {self.sweeps_per_block}"
             )
 
 

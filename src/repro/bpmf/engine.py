@@ -21,6 +21,13 @@ order (tests/test_engine.py asserts this).
 Determinism note: the sampler key is derived from ``RunConfig.seed`` and
 per-sweep keys from ``(key, state.sweep)``, so a run restored from a
 checkpoint continues with *identical* randomness to an uninterrupted one.
+
+Run-loop note (DESIGN.md §10): sweeps execute in jitted device blocks of
+``RunConfig.sweeps_per_block`` with one host sync per block — posterior-mean
+sums, the recent-sample window and the prediction accumulator fold on-device
+in the block's scan carry, and per-sweep metrics arrive as one stacked
+transfer. Samples, metrics, checkpoints and exported artifacts are bitwise
+identical at every block size.
 """
 from __future__ import annotations
 
@@ -38,75 +45,36 @@ from repro.serve import ArtifactMeta, PosteriorPredictor, save_artifact
 
 
 class _PosteriorAccumulator:
-    """Running posterior-mean factors + a bounded window of recent samples.
+    """Thin host *view* over the device-resident posterior accumulator.
 
-    Feeds the serving artifact (DESIGN.md §9): ``U_sum / count`` is the
-    plug-in posterior mean over every post-burn-in sweep, and ``samples``
-    keeps the ``keep`` most recent post-burn-in ``(U, V)`` draws for
-    predictive-std output. All host-side float32 so a checkpoint-resumed
-    run accumulates bitwise the same artifact as an uninterrupted one.
+    The accumulation itself happens on-device inside the blocked sweep loop
+    (:class:`repro.core.types.PosteriorAccum`, DESIGN.md §10) — running
+    float32 posterior-mean sums plus a rotating window of the
+    ``keep_factor_samples`` most recent post-burn-in ``(U, V)`` draws,
+    sharded like the factors on the distributed backends. This view only
+    materializes host arrays at export/checkpoint time, in original item
+    order and the same schema (chronological sample stacks) the old
+    host-side accumulator used, so checkpoints and artifacts stay bitwise
+    compatible across the refactor.
     """
 
-    def __init__(self, keep: int):
-        self.keep = keep
-        self.U_sum: np.ndarray | None = None
-        self.V_sum: np.ndarray | None = None
-        self.count = 0
-        self.samples: list[tuple[np.ndarray, np.ndarray]] = []
+    def __init__(self, engine: "BPMFEngine"):
+        self._engine = engine
 
-    def update(self, U: np.ndarray, V: np.ndarray) -> None:
-        """Fold one post-burn-in sample into the mean and the window."""
-        U = np.asarray(U, np.float32)
-        V = np.asarray(V, np.float32)
-        if self.U_sum is None:
-            self.U_sum, self.V_sum = U.copy(), V.copy()
-        else:
-            self.U_sum += U
-            self.V_sum += V
-        self.count += 1
-        if self.keep > 0:
-            self.samples.append((U, V))
-            del self.samples[: -self.keep]
-
-    def mean(self) -> tuple[np.ndarray, np.ndarray]:
-        """(U_mean, V_mean) over the accumulated samples (count > 0)."""
-        n = np.float32(self.count)
-        return self.U_sum / n, self.V_sum / n
-
-    def stacked(self) -> tuple[np.ndarray, np.ndarray]:
-        """Window as [S, N, K] / [S, M, K] stacks (S may be 0)."""
-        if not self.samples:
-            return np.zeros((0, 0, 0), np.float32), np.zeros((0, 0, 0), np.float32)
-        return (
-            np.stack([u for u, _ in self.samples]),
-            np.stack([v for _, v in self.samples]),
-        )
+    @property
+    def count(self) -> int:
+        """Post-burn-in samples folded so far (0 before the first block)."""
+        accum = self._engine._accum
+        return int(accum.count) if accum is not None else 0
 
     def tree(self) -> dict:
-        """Checkpointable pytree (fixed key set, shapes vary with count)."""
-        zero = np.zeros((0, 0), np.float32)
-        Us, Vs = self.stacked()
-        return {
-            "U_sum": zero if self.U_sum is None else self.U_sum,
-            "V_sum": zero if self.V_sum is None else self.V_sum,
-            "count": np.asarray(self.count, np.int32),
-            "U_samples": Us,
-            "V_samples": Vs,
-        }
+        """Checkpointable host tree (fixed key set, shapes vary with count)."""
+        return self._engine.backend.accum_host(self._engine._accum)
 
     def load_tree(self, tree: dict) -> None:
-        """Restore from :meth:`tree` output (trims to this run's ``keep``)."""
-        self.count = int(tree["count"])
-        # np.array, not asarray: device arrays give read-only host views and
-        # the running sums are mutated in place
-        U_sum = np.array(tree["U_sum"], np.float32)
-        V_sum = np.array(tree["V_sum"], np.float32)
-        self.U_sum = U_sum if self.count else None
-        self.V_sum = V_sum if self.count else None
-        Us = np.asarray(tree["U_samples"], np.float32)
-        Vs = np.asarray(tree["V_samples"], np.float32)
-        self.samples = [(Us[i], Vs[i]) for i in range(Us.shape[0])]
-        del self.samples[: max(len(self.samples) - self.keep, 0)]
+        """Restore the device accumulator from :meth:`tree` output (trims
+        to this run's ``keep_factor_samples``)."""
+        self._engine._accum = self._engine.backend.accum_from_host(tree)
 
 
 class BPMFEngine:
@@ -124,12 +92,16 @@ class BPMFEngine:
         self.history: list[SweepMetrics] = []
         self._state = None
         self._pred = None
+        self._accum = None  # device-resident PosteriorAccum (DESIGN.md §10)
         self._sweeps_done = 0
         self._data_fingerprint: tuple[int, int, int] | None = None
         self._ckpt: Optional[CheckpointManager] = None
-        self._posterior = _PosteriorAccumulator(self.cfg.run.keep_factor_samples)
+        self._posterior = _PosteriorAccumulator(self)
         self._predictor: Optional[PosteriorPredictor] = None
         self._predictor_sweep = -1
+        # bytes fetched from device for metrics, summed over the run — what
+        # benchmarks/sweep_throughput.py reports as host traffic per sweep
+        self.host_metric_bytes = 0
         key = jax.random.key(self.cfg.run.seed)
         self._k_init, self._k_run = jax.random.split(key)
 
@@ -167,6 +139,7 @@ class BPMFEngine:
         if self._state is None:
             self._state = self.backend.init_state(self._k_init)
             self._pred = self.backend.init_pred()
+            self._accum = self.backend.init_accum()
             self._sweeps_done = 0
 
     def _manager(self) -> CheckpointManager:
@@ -183,12 +156,33 @@ class BPMFEngine:
     # ------------------------------------------------------------------
     # the run loop
     # ------------------------------------------------------------------
+    def _next_block_len(self) -> int:
+        """Sweeps in the next device block: ``sweeps_per_block``, shrunk so
+        blocks land exactly on ``checkpoint_every`` boundaries and the final
+        sweep (the partition never changes the samples — only how many
+        sweeps run per host round-trip)."""
+        run = self.cfg.run
+        n = min(run.sweeps_per_block, run.num_sweeps - self._sweeps_done)
+        if run.checkpoint_every:
+            n = min(n, run.checkpoint_every - self._sweeps_done % run.checkpoint_every)
+        return max(n, 1)
+
     def sample(self, data: RatingsCOO | None = None) -> Iterator[SweepMetrics]:
         """Stream per-sweep metrics from the current sweep to ``num_sweeps``.
 
         Resumable: after ``restore()`` the iterator continues where the
         checkpoint left off, drawing the same randomness an uninterrupted
         run would have.
+
+        Execution is *blocked* (DESIGN.md §10): sweeps run on-device in
+        jitted blocks of ``RunConfig.sweeps_per_block`` with a single host
+        sync per block, and the block's metrics are then yielded one per
+        sweep. The public iterator contract is unchanged — one
+        :class:`SweepMetrics` per sweep, in sweep order, with history
+        ordering and ``checkpoint_every`` cadence identical at every block
+        size — but metrics for sweeps of the same block become available
+        together, and abandoning the iterator mid-block leaves the engine
+        advanced to the end of the last executed block.
 
         Args:
             data: Ratings to ``prepare()`` first, if not already prepared.
@@ -202,18 +196,20 @@ class BPMFEngine:
         self._ensure_state()
         every = self.cfg.run.checkpoint_every
         while self._sweeps_done < self.cfg.run.num_sweeps:
-            self._state, self._pred, metrics = self.backend.sweep(
-                self._k_run, self._state, self._pred
+            n = self._next_block_len()
+            self._state, self._pred, self._accum, rows = self.backend.sweep_block(
+                self._k_run, self._state, self._pred, self._accum, n
             )
-            self._sweeps_done += 1
-            if self._sweeps_done > self.cfg.run.burn_in:
-                # same gating as the in-sweep PredictionState accumulator
-                self._posterior.update(*self.factors())
-            metrics = jax.tree_util.tree_map(float, metrics)
-            self.history.append(metrics)
+            rows = np.asarray(jax.device_get(rows))  # the block's one host sync
+            self.host_metric_bytes += int(rows.nbytes)
+            self._sweeps_done += n
+            block = [
+                SweepMetrics(float(r[0]), float(r[1]), float(r[2])) for r in rows
+            ]
+            self.history.extend(block)
             if every and self._sweeps_done % every == 0:
                 self.save()
-            yield metrics
+            yield from block
 
     def fit(self, data: RatingsCOO | None = None, resume: bool = False) -> "BPMFEngine":
         """Run (or finish) all sweeps.
@@ -304,16 +300,22 @@ class BPMFEngine:
 
         Posterior-mean factors when post-burn-in samples have been
         accumulated, else the current raw sample (``num_mean_samples=0``).
+        One host gather of the device accumulator feeds the whole payload.
         """
         self._ensure_state()
-        if self._posterior.count:
-            U_mean, V_mean = self._posterior.mean()
+        tree = self._posterior.tree()  # single device -> host gather
+        count = int(tree["count"])
+        if count:
+            n = np.float32(count)
+            U_mean = np.asarray(tree["U_sum"] / n, np.float32)
+            V_mean = np.asarray(tree["V_sum"] / n, np.float32)
         else:
-            U_mean, V_mean = self.factors()
-        U_mean = np.asarray(U_mean, np.float32)
-        V_mean = np.asarray(V_mean, np.float32)
-        Us, Vs = self._posterior.stacked()
-        S = len(self._posterior.samples)
+            U, V = self.factors()
+            U_mean = np.asarray(U, np.float32)
+            V_mean = np.asarray(V, np.float32)
+        Us = np.asarray(tree["U_samples"], np.float32)
+        Vs = np.asarray(tree["V_samples"], np.float32)
+        S = Us.shape[0]
         if S == 0:  # canonical empty shapes for the artifact schema
             Us = np.zeros((0,) + U_mean.shape, np.float32)
             Vs = np.zeros((0,) + V_mean.shape, np.float32)
@@ -325,7 +327,7 @@ class BPMFEngine:
             mean_rating=float(self.backend.mean_rating),
             min_rating=float(lo),
             max_rating=float(hi),
-            num_mean_samples=self._posterior.count,
+            num_mean_samples=count,
             num_kept_samples=S,
             backend=self.cfg.backend.name,
             num_sweeps_done=self._sweeps_done,
@@ -412,11 +414,21 @@ class BPMFEngine:
         step = mgr.latest() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {self.cfg.run.checkpoint_dir}")
+        # posterior template: leaf names only (restore loads whatever shapes
+        # the checkpoint holds) — cheaper than gathering the zeroed device
+        # accumulator just to name its leaves
+        posterior_target = {
+            "U_sum": np.zeros((0, 0), np.float32),
+            "V_sum": np.zeros((0, 0), np.float32),
+            "count": np.zeros((), np.int32),
+            "U_samples": np.zeros((0, 0, 0), np.float32),
+            "V_samples": np.zeros((0, 0, 0), np.float32),
+        }
         target = {
             "state": self._state,
             "pred": self._pred,
             "history": np.zeros((0, 3), np.float32),
-            "posterior": self._posterior.tree(),
+            "posterior": posterior_target,
         }
         try:
             tree = mgr.restore(target, step=step)
@@ -430,7 +442,7 @@ class BPMFEngine:
             tree = mgr.restore(
                 {k: v for k, v in target.items() if k != "posterior"}, step=step
             )
-            self._posterior = _PosteriorAccumulator(self.cfg.run.keep_factor_samples)
+            self._accum = self.backend.init_accum()
         self._state, self._pred = tree["state"], tree["pred"]
         self._predictor, self._predictor_sweep = None, -1
         self._sweeps_done = step

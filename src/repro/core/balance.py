@@ -16,6 +16,7 @@ become:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -53,12 +54,8 @@ class Partition:
 def lpt_partition(costs: np.ndarray, num_shards: int) -> list[np.ndarray]:
     """Greedy longest-processing-time: items sorted by cost desc onto min-loaded shard."""
     order = np.argsort(-costs, kind="stable")
-    loads = np.zeros(num_shards)
     assign = np.zeros(len(costs), dtype=np.int64)
-    # vectorized chunks keep this O(n log n)-ish in practice; plain loop is
-    # fine at ChEMBL scale (~500k items, <1s)
-    import heapq
-
+    # heap-based greedy is O(n log S); fine at ChEMBL scale (~500k items, <1s)
     heap = [(0.0, s) for s in range(num_shards)]
     heapq.heapify(heap)
     for i in order:

@@ -61,8 +61,8 @@ from repro.core import posterior
 from repro.core.balance import CostModel, Partition, partition_items
 from repro.core.gibbs import SweepMetrics, sweep_keys
 from repro.core.hyper import hyper_sufficient_stats, sample_hyper_from_stats
-from repro.core.prediction import PredictionState, rmse
-from repro.core.types import BPMFConfig, Bucket, HyperParams
+from repro.core.prediction import PredictionState, rmse, update_posterior_accum
+from repro.core.types import BPMFConfig, Bucket, HyperParams, PosteriorAccum
 from repro.data.sparse import RatingsCOO, csr_from_coo, train_test_split
 from repro.utils import pytree_dataclass, static_field
 
@@ -488,7 +488,7 @@ def _predict_dist(
     return jnp.clip(preds, min_rating, max_rating)
 
 
-def _sweep_device_fn(
+def _sweep_step_device(
     key: jax.Array,
     U_loc: jax.Array,
     V_loc: jax.Array,
@@ -497,8 +497,13 @@ def _sweep_device_fn(
     pred_n: jax.Array,
     data: DistBPMFData,  # local slices of the sharded leaves
     cfg: BPMFConfig,
-) -> tuple[jax.Array, jax.Array, HyperParams, HyperParams, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One full Gibbs sweep on one device (Algorithm 1, distributed)."""
+) -> tuple[jax.Array, jax.Array, HyperParams, HyperParams, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One full Gibbs sweep on one device (Algorithm 1, distributed).
+
+    Traceable body shared by the per-sweep ``shard_map`` entry point and the
+    blocked scan loop; returns scalar ``(r_sample, r_avg)`` separately so
+    callers stack metrics however they batch sweeps.
+    """
     S = data.num_shards
     prior = cfg.prior()
     k_hv, k_v, k_hu, k_u = sweep_keys(key, sweep)
@@ -530,7 +535,64 @@ def _sweep_device_fn(
     r_sample = rmse(preds, data.test.vals)
     avg = pred_sum / jnp.maximum(pred_n, 1).astype(jnp.float32)
     r_avg = jnp.where(pred_n > 0, rmse(avg, data.test.vals), r_sample)
-    return U_new, V_new, hyper_U, hyper_V, new_sweep, pred_sum, pred_n, jnp.stack([r_sample, r_avg])
+    return U_new, V_new, hyper_U, hyper_V, new_sweep, pred_sum, pred_n, r_sample, r_avg
+
+
+def _sweep_device_fn(
+    key: jax.Array,
+    U_loc: jax.Array,
+    V_loc: jax.Array,
+    sweep: jax.Array,
+    pred_sum: jax.Array,
+    pred_n: jax.Array,
+    data: DistBPMFData,
+    cfg: BPMFConfig,
+) -> tuple[jax.Array, jax.Array, HyperParams, HyperParams, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-sweep ``shard_map`` body (legacy entry point)."""
+    U, V, hU, hV, sweep, pred_sum, pred_n, r_sample, r_avg = _sweep_step_device(
+        key, U_loc, V_loc, sweep, pred_sum, pred_n, data, cfg
+    )
+    return U, V, hU, hV, sweep, pred_sum, pred_n, jnp.stack([r_sample, r_avg])
+
+
+def _sweep_block_device_fn(
+    key: jax.Array,
+    U_loc: jax.Array,
+    V_loc: jax.Array,
+    hyper_U: HyperParams,
+    hyper_V: HyperParams,
+    sweep: jax.Array,
+    pred_sum: jax.Array,
+    pred_n: jax.Array,
+    accum: PosteriorAccum,  # local shard slices (windows sliced on axis 1)
+    data: DistBPMFData,
+    cfg: BPMFConfig,
+    block_size: int,
+) -> tuple[jax.Array, jax.Array, HyperParams, HyperParams, jax.Array, jax.Array, jax.Array, PosteriorAccum, jax.Array]:
+    """``block_size`` sweeps in one on-device ``lax.scan`` (DESIGN.md §10).
+
+    The posterior accumulator shards travel in the scan carry next to the
+    factor shards they summarize: each device folds only its local rows, so
+    accumulation adds zero communication and zero host traffic. The burn-in
+    gate is the traced ``sweep > burn_in`` predicate — blocks may straddle
+    burn-in. Per-sweep ``[3]`` metric rows stack into the ``[block_size, 3]``
+    ys output, the block's single host transfer.
+    """
+
+    def body(carry, _):
+        U, V, hU, hV, sw, ps, pn, ac = carry
+        U, V, hU, hV, sw, ps, pn, r_sample, r_avg = _sweep_step_device(
+            key, U, V, sw, ps, pn, data, cfg
+        )
+        ac = update_posterior_accum(ac, U, V, sw > cfg.burn_in)
+        row = jnp.stack([r_sample, r_avg, sw.astype(jnp.float32)])
+        return (U, V, hU, hV, sw, ps, pn, ac), row
+
+    init = (U_loc, V_loc, hyper_U, hyper_V, sweep, pred_sum, pred_n, accum)
+    (U, V, hU, hV, sw, ps, pn, ac), metrics = jax.lax.scan(
+        body, init, None, length=block_size
+    )
+    return U, V, hU, hV, sw, ps, pn, ac, metrics
 
 
 # --------------------------------------------------------------------------
@@ -634,6 +696,87 @@ def dist_gibbs_sweep(
     new_state = DistState(U=U, V=V, hyper_U=hU, hyper_V=hV, sweep=sweep)
     new_pred = PredictionState(sum_pred=psum_, num_samples=pn)
     return new_state, new_pred, SweepMetrics(r[0], r[1], sweep)
+
+
+def accum_specs() -> PosteriorAccum:
+    """PartitionSpec tree for the sharded posterior accumulator.
+
+    Sums are ring-sharded like the factor shards they summarize; the
+    rotating windows shard their *item* axis (axis 1) the same way, with the
+    window axis replicated; ``count`` is replicated.
+    """
+    ring = P(RING_AXIS)
+    return PosteriorAccum(
+        U_sum=ring, V_sum=ring, count=P(), filled=P(),
+        U_window=P(None, RING_AXIS), V_window=P(None, RING_AXIS),
+    )
+
+
+def init_dist_accum(
+    data: DistBPMFData, cfg: BPMFConfig, mesh: Mesh, keep: int
+) -> PosteriorAccum:
+    """Zeroed posterior accumulator in the relabeled sharded layout.
+
+    Sums/windows cover every slot of the ``[S*cap, K]`` shards (pad slots
+    accumulate garbage that the host view never reads — ``gather_factors``'
+    permutation only touches real items).
+    """
+    num_u = data.users.orig_ids.shape[0]
+    num_v = data.movies.orig_ids.shape[0]
+    accum = PosteriorAccum.init(num_u, num_v, cfg.K, keep)
+    specs = accum_specs()
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), accum, specs
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "block_size"))
+def dist_gibbs_sweep_block(
+    key: jax.Array,
+    state: DistState,
+    pred_state: PredictionState,
+    accum: PosteriorAccum,
+    data: DistBPMFData,
+    cfg: BPMFConfig,
+    mesh: Mesh,
+    block_size: int,
+) -> tuple[DistState, PredictionState, PosteriorAccum, jax.Array]:
+    """jit entry point: ``block_size`` distributed sweeps, one host sync.
+
+    One ``shard_map`` enter/exit per block wraps the on-device scan of
+    :func:`_sweep_block_device_fn`; factors, prediction sums and the
+    posterior accumulator stay sharded on-device for the whole block.
+    Returns per-sweep metrics as a replicated ``[block_size, 3]`` f32 array
+    of ``(rmse_sample, rmse_avg, sweep)`` rows.
+    """
+    ring = P(RING_AXIS)
+    rep = P()
+    hyper_spec = HyperParams(mu=rep, Lam=rep)
+
+    fn = shard_map(
+        functools.partial(_sweep_block_device_fn, cfg=cfg, block_size=block_size),
+        mesh=mesh,
+        in_specs=(
+            rep,  # key
+            ring,  # U
+            ring,  # V
+            hyper_spec,
+            hyper_spec,
+            rep,  # sweep
+            rep,  # pred_sum (replicated test preds)
+            rep,  # pred_n
+            accum_specs(),
+            data_specs(data),
+        ),
+        out_specs=(ring, ring, hyper_spec, hyper_spec, rep, rep, rep, accum_specs(), rep),
+    )
+    U, V, hU, hV, sweep, psum_, pn, accum, metrics = fn(
+        key, state.U, state.V, state.hyper_U, state.hyper_V, state.sweep,
+        pred_state.sum_pred, pred_state.num_samples, accum, data,
+    )
+    new_state = DistState(U=U, V=V, hyper_U=hU, hyper_V=hV, sweep=sweep)
+    new_pred = PredictionState(sum_pred=psum_, num_samples=pn)
+    return new_state, new_pred, accum, metrics
 
 
 def run_distributed(

@@ -20,8 +20,18 @@ import jax.numpy as jnp
 
 from repro.core import posterior
 from repro.core.hyper import sample_hyper
-from repro.core.prediction import PredictionState, update_predictions
-from repro.core.types import BPMFConfig, BPMFData, BPMFState, HyperParams
+from repro.core.prediction import (
+    PredictionState,
+    update_posterior_accum,
+    update_predictions,
+)
+from repro.core.types import (
+    BPMFConfig,
+    BPMFData,
+    BPMFState,
+    HyperParams,
+    PosteriorAccum,
+)
 
 
 class SweepMetrics(NamedTuple):
@@ -68,14 +78,15 @@ def sweep_keys(key: jax.Array, sweep: jax.Array) -> tuple[jax.Array, ...]:
     return tuple(jax.random.fold_in(k, i) for i in range(4))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def gibbs_sweep(
+def _sweep_body(
     key: jax.Array,
     state: BPMFState,
     pred_state: PredictionState,
     data: BPMFData,
     cfg: BPMFConfig,
 ) -> tuple[BPMFState, PredictionState, SweepMetrics]:
+    """One Gibbs sweep (Algorithm 1), traceable — shared by the per-sweep
+    jit entry point and the blocked ``lax.scan`` loop."""
     prior = cfg.prior()
     k_hv, k_v, k_hu, k_u = sweep_keys(key, state.sweep)
 
@@ -98,6 +109,58 @@ def gibbs_sweep(
         pred_state, U, V, data, burned_in=sweep > cfg.burn_in
     )
     return new_state, pred_state, SweepMetrics(r_sample, r_avg, sweep)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def gibbs_sweep(
+    key: jax.Array,
+    state: BPMFState,
+    pred_state: PredictionState,
+    data: BPMFData,
+    cfg: BPMFConfig,
+) -> tuple[BPMFState, PredictionState, SweepMetrics]:
+    return _sweep_body(key, state, pred_state, data, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_size"))
+def gibbs_sweep_block(
+    key: jax.Array,
+    state: BPMFState,
+    pred_state: PredictionState,
+    accum: PosteriorAccum,
+    data: BPMFData,
+    cfg: BPMFConfig,
+    block_size: int,
+) -> tuple[BPMFState, PredictionState, PosteriorAccum, jax.Array]:
+    """``block_size`` Gibbs sweeps in one jitted ``lax.scan`` — no host sync.
+
+    The posterior accumulator (running mean sums + rotating recent-sample
+    window) and the prediction accumulator travel in the scan carry; the
+    burn-in gate is the on-device ``sweep > burn_in`` predicate, so blocks
+    may straddle burn-in. Per-sweep randomness is keyed by ``state.sweep``
+    exactly as in :func:`gibbs_sweep`, so any partition of a run into blocks
+    draws identical samples.
+
+    Returns:
+        ``(state, pred_state, accum, metrics)`` with ``metrics`` a
+        ``[block_size, 3]`` float32 device array of per-sweep
+        ``(rmse_sample, rmse_avg, sweep)`` rows — one host transfer fetches
+        the whole block's metrics.
+    """
+
+    def body(carry, _):
+        st, pr, ac = carry
+        st, pr, m = _sweep_body(key, st, pr, data, cfg)
+        ac = update_posterior_accum(ac, st.U, st.V, st.sweep > cfg.burn_in)
+        row = jnp.stack(
+            [m.rmse_sample, m.rmse_avg, m.sweep.astype(jnp.float32)]
+        )
+        return (st, pr, ac), row
+
+    (state, pred_state, accum), metrics = jax.lax.scan(
+        body, (state, pred_state, accum), None, length=block_size
+    )
+    return state, pred_state, accum, metrics
 
 
 def run(

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import BPMFData, TestSet
+from repro.core.types import BPMFData, PosteriorAccum, TestSet
 from repro.utils import pytree_dataclass
 
 
@@ -54,3 +54,39 @@ def update_predictions(
     # before burn-in the average is empty; report the sample RMSE instead
     r_avg = jnp.where(new_state.num_samples > 0, rmse(avg, data.test.vals), r_sample)
     return new_state, r_sample, r_avg
+
+
+def update_posterior_accum(
+    accum: PosteriorAccum, U: jax.Array, V: jax.Array, burned_in: jax.Array
+) -> PosteriorAccum:
+    """Fold one sample into the device-resident posterior summary.
+
+    Pure on-device (scan-body safe): ``burned_in`` is a traced predicate, so
+    blocks that straddle burn-in gate per sweep without a host sync. Sums add
+    ``x * 1.0f`` / ``x * 0.0f``, which is bitwise what the old host
+    accumulator's conditional ``+=`` computed; the rotating window writes the
+    sample at slot ``count % keep`` only when burned in (slot 0 is re-written
+    with its own value otherwise, a no-op).
+    """
+    inc = burned_in.astype(jnp.int32)
+    gate = inc.astype(jnp.float32)
+    Uf = U.astype(jnp.float32)
+    Vf = V.astype(jnp.float32)
+    keep = accum.keep
+    U_win, V_win = accum.U_window, accum.V_window
+    if keep > 0:  # static: keep == 0 means no window is kept at all
+        pos = jnp.where(burned_in, jnp.mod(accum.count, keep), 0)
+        u_cur = jax.lax.dynamic_index_in_dim(U_win, pos, axis=0, keepdims=False)
+        v_cur = jax.lax.dynamic_index_in_dim(V_win, pos, axis=0, keepdims=False)
+        u_row = jnp.where(burned_in, Uf, u_cur)
+        v_row = jnp.where(burned_in, Vf, v_cur)
+        U_win = jax.lax.dynamic_update_index_in_dim(U_win, u_row, pos, axis=0)
+        V_win = jax.lax.dynamic_update_index_in_dim(V_win, v_row, pos, axis=0)
+    return PosteriorAccum(
+        U_sum=accum.U_sum + Uf * gate,
+        V_sum=accum.V_sum + Vf * gate,
+        count=accum.count + inc,
+        filled=jnp.minimum(accum.filled + inc, keep),
+        U_window=U_win,
+        V_window=V_win,
+    )

@@ -65,6 +65,55 @@ class BPMFState:
 
 
 @pytree_dataclass
+class PosteriorAccum:
+    """Device-resident posterior summary folded into the sweep loop carry.
+
+    Replaces the engine's old host-side accumulator (which gathered the full
+    (U, V) factors to the host after every post-burn-in sweep): the running
+    posterior-mean sums and a rotating window of the ``keep`` most recent
+    post-burn-in samples live next to the factors — sharded the same way on
+    the distributed backends — and are updated inside the jitted block scan
+    with an on-device burn-in predicate, so nothing crosses the host
+    boundary until export/checkpoint time.
+
+    Layout notes:
+      * ``U_sum`` / ``V_sum`` accumulate float32 casts of the samples, so a
+        resumed run folds bitwise the same values the old host path did.
+      * ``U_window[count % keep]`` holds the sample drawn at post-burn-in
+        index ``count`` (a rotating buffer); chronological order is
+        reconstructed on the host from ``count`` when exporting.
+      * ``count`` is the number of post-burn-in samples folded so far;
+        ``filled`` is the number of *materialized* window entries
+        (``min(count, keep)`` in an uninterrupted run, possibly fewer after
+        restoring a checkpoint that retained fewer samples — e.g. one
+        written with a smaller ``keep`` — so zero-filled slots are never
+        reported as samples).
+    """
+
+    U_sum: jax.Array  # [M, K] f32 running sum of post-burn-in U samples
+    V_sum: jax.Array  # [N, K] f32 running sum of post-burn-in V samples
+    count: jax.Array  # scalar int32, post-burn-in samples folded
+    filled: jax.Array  # scalar int32, valid window entries (<= keep)
+    U_window: jax.Array  # [keep, M, K] f32 rotating recent-sample buffer
+    V_window: jax.Array  # [keep, N, K] f32
+
+    @property
+    def keep(self) -> int:
+        return self.U_window.shape[0]
+
+    @staticmethod
+    def init(num_users: int, num_movies: int, K: int, keep: int) -> "PosteriorAccum":
+        return PosteriorAccum(
+            U_sum=jnp.zeros((num_users, K), jnp.float32),
+            V_sum=jnp.zeros((num_movies, K), jnp.float32),
+            count=jnp.zeros((), jnp.int32),
+            filled=jnp.zeros((), jnp.int32),
+            U_window=jnp.zeros((keep, num_users, K), jnp.float32),
+            V_window=jnp.zeros((keep, num_movies, K), jnp.float32),
+        )
+
+
+@pytree_dataclass
 class Bucket:
     """A dense, padded group of items with similar rating counts.
 

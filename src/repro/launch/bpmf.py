@@ -36,6 +36,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--K", type=int, default=16, help="latent rank")
     p.add_argument("--alpha", type=float, default=2.0, help="rating noise precision")
     p.add_argument("--sweeps", type=int, default=50)
+    p.add_argument("--sweeps-per-block", type=int, default=8,
+                   help="Gibbs sweeps per jitted device block (one host sync "
+                        "per block; 1 = per-sweep dispatch, same samples)")
     p.add_argument("--burn-in", type=int, default=8)
     p.add_argument("--seed", type=int, default=0, help="split + sampler seed")
     p.add_argument("--num-shards", type=int, default=0,
@@ -92,6 +95,7 @@ def main(argv: list[str] | None = None) -> int:
         K=args.K,
         alpha=args.alpha,
         num_sweeps=args.sweeps,
+        sweeps_per_block=args.sweeps_per_block,
         burn_in=args.burn_in,
         seed=args.seed,
         checkpoint_dir=args.checkpoint_dir,

@@ -1,0 +1,255 @@
+"""Device-resident blocked sweep loop (DESIGN.md §10).
+
+The correctness bar of the block refactor: at any ``sweeps_per_block`` the
+sampler draws identical randomness, so samples, metric history, checkpoint
+cadence and exported artifacts are **bitwise** equal to a per-sweep run on
+every backend — including runs interrupted and resumed at a sweep that is
+not a block boundary, and blocks that straddle burn-in.
+
+These tests run in-process on the tier-1 forced 8-device host mesh, so the
+distributed backends exercise a real ring.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+from repro.serve import load_artifact
+
+ARRAY_KEYS = ("U_mean", "V_mean", "U_samples", "V_samples")
+BACKENDS = ("sequential", "ring", "ring_async", "allgather")
+
+
+def _cfg(**kw) -> BPMFConfig:
+    base = dict(
+        K=6, num_sweeps=7, burn_in=2, bucket_pads=(8, 32, 128),
+        keep_factor_samples=3,
+    )
+    base.update(kw)
+    return BPMFConfig().replace(**base)
+
+
+def _coo(seed: int = 3):
+    return load_dataset(
+        "synthetic", num_users=90, num_movies=45, nnz=1000, noise_std=0.3, seed=seed
+    )
+
+
+def _artifact_equal(a, b, msg=""):
+    meta_a, arrs_a = a
+    meta_b, arrs_b = b
+    assert meta_a == meta_b, (msg, meta_a, meta_b)
+    for k in ARRAY_KEYS:
+        np.testing.assert_array_equal(arrs_a[k], arrs_b[k], err_msg=f"{msg}:{k}")
+
+
+# ---------- bitwise parity across block sizes ----------
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_block_sizes_bitwise_identical(tmp_path, name):
+    """sweeps_per_block ∈ {1, 4, 8}: factors, per-sweep history and the
+    exported artifact are bitwise identical — blocking only changes how many
+    sweeps run per host round-trip, never the samples. Blocks straddle
+    burn-in (burn_in=2 < 4) so the on-device gate is exercised."""
+    coo = _coo()
+    outs = {}
+    for spb in (1, 4, 8):
+        e = BPMFEngine(_cfg(name=name, sweeps_per_block=spb)).fit(coo)
+        art = load_artifact(e.export(str(tmp_path / f"{name}-{spb}")))
+        outs[spb] = (e.factors(), [tuple(m) for m in e.history], art)
+    (U0, V0), hist0, art0 = outs[1]
+    for spb in (4, 8):
+        (U, V), hist, art = outs[spb]
+        np.testing.assert_array_equal(U, U0, err_msg=f"{name}@{spb}")
+        np.testing.assert_array_equal(V, V0, err_msg=f"{name}@{spb}")
+        assert hist == hist0, f"{name}@{spb}: history diverged"
+        _artifact_equal(art, art0, msg=f"{name}@{spb}")
+
+
+def test_history_ordering_and_checkpoint_cadence_block_invariant(tmp_path):
+    """Deprecation hygiene: ``sample()`` still yields exactly one
+    SweepMetrics per sweep in sweep order, and ``checkpoint_every``
+    auto-saves land on the same steps, at every block size (blocks shrink to
+    checkpoint boundaries rather than skipping them)."""
+    coo = _coo(seed=6)
+    cadences = {}
+    for spb in (1, 3, 8):
+        cfg = _cfg(
+            sweeps_per_block=spb, num_sweeps=8, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path / f"spb{spb}"), keep_checkpoints=99,
+        )
+        engine = BPMFEngine(cfg)
+        yielded = [m for m in engine.sample(coo)]
+        assert [int(m.sweep) for m in yielded] == list(range(1, 9))
+        assert yielded == engine.history
+        cadences[spb] = (engine._manager().all_steps(), [tuple(m) for m in yielded])
+    steps0, hist0 = cadences[1]
+    assert steps0 == [3, 6]  # 8 is not a checkpoint_every multiple
+    for spb, (steps, hist) in cadences.items():
+        assert steps == steps0, (spb, steps)
+        assert hist == hist0, f"spb={spb}: metrics diverged"
+
+
+# ---------- mid-block interruption (the satellite's headline case) ----------
+
+
+@pytest.mark.parametrize("name", ["ring", "ring_async"])
+def test_mid_block_interruption_resumes_bitwise(tmp_path, name):
+    """Checkpoint at a sweep that is *not* a block boundary (checkpoint_every=3
+    shrinks the 4-sweep blocks), restore in a fresh engine, finish: samples
+    and the exported artifact are bitwise identical both to an uninterrupted
+    blocked run and to a per-sweep (sweeps_per_block=1) run."""
+    coo = _coo(seed=5)
+    extra = {"pipeline_depth": 2} if name == "ring_async" else {}
+    cfg = _cfg(
+        name=name, num_sweeps=8, sweeps_per_block=4, checkpoint_every=3,
+        checkpoint_dir=str(tmp_path / "ckpt"), **extra,
+    )
+
+    full = BPMFEngine(cfg).fit(coo)
+    full_art = load_artifact(full.export(str(tmp_path / "full")))
+    ref = BPMFEngine(
+        cfg.replace(sweeps_per_block=1, checkpoint_dir=None, checkpoint_every=0)
+    ).fit(coo)
+    np.testing.assert_array_equal(full.factors()[0], ref.factors()[0])
+
+    resumed = BPMFEngine(cfg)
+    assert resumed.restore(coo, step=3) == 3  # 3 % 4 != 0: mid-block sweep
+    resumed.fit()
+    res_art = load_artifact(resumed.export(str(tmp_path / "resumed")))
+    _artifact_equal(res_art, full_art, msg=name)
+    np.testing.assert_array_equal(resumed.factors()[0], full.factors()[0])
+    np.testing.assert_array_equal(resumed.factors()[1], full.factors()[1])
+    assert [tuple(m) for m in resumed.history] == [tuple(m) for m in full.history]
+
+
+# ---------- on-device accumulator semantics ----------
+
+
+def test_device_accumulator_matches_host_reference():
+    """The on-device posterior sums and rotating window reproduce exactly
+    what the old host accumulator computed: fold every post-burn-in sample
+    on the host from a per-sweep run and compare with export()."""
+    coo = _coo(seed=7)
+    cfg = _cfg(num_sweeps=8, burn_in=2, keep_factor_samples=3, sweeps_per_block=1)
+    engine = BPMFEngine(cfg)
+    samples = []
+    for m in engine.sample(coo):
+        if int(m.sweep) > cfg.run.burn_in:
+            samples.append(tuple(np.asarray(x, np.float32) for x in engine.factors()))
+    U_sum = np.zeros_like(samples[0][0])
+    V_sum = np.zeros_like(samples[0][1])
+    for U, V in samples:
+        U_sum += U
+        V_sum += V
+    n = np.float32(len(samples))
+
+    meta, arrays = engine._artifact_payload()
+    assert meta.num_mean_samples == len(samples) == 6
+    np.testing.assert_array_equal(arrays["U_mean"], U_sum / n)
+    np.testing.assert_array_equal(arrays["V_mean"], V_sum / n)
+    # window = the 3 most recent draws, oldest first
+    np.testing.assert_array_equal(
+        arrays["U_samples"], np.stack([u for u, _ in samples[-3:]])
+    )
+    np.testing.assert_array_equal(
+        arrays["V_samples"], np.stack([v for _, v in samples[-3:]])
+    )
+
+
+def test_keep_zero_disables_window():
+    coo = _coo(seed=4)
+    engine = BPMFEngine(_cfg(keep_factor_samples=0, sweeps_per_block=4)).fit(coo)
+    meta, arrays = engine._artifact_payload()
+    assert meta.num_kept_samples == 0
+    assert arrays["U_samples"].shape[0] == 0
+    assert meta.num_mean_samples == 5  # sums still accumulate
+
+
+def test_pre_block_posterior_checkpoint_restores(tmp_path):
+    """A 'posterior' subtree in the PR-4 host-accumulator schema (built by
+    hand from per-sweep factors) restores into the device accumulator and
+    the finished run exports bitwise what an uninterrupted run exports."""
+    from repro.checkpoint import save_checkpoint
+
+    coo = _coo(seed=9)
+    cfg = _cfg(num_sweeps=6, burn_in=1, sweeps_per_block=3,
+               checkpoint_dir=str(tmp_path / "ckpt"))
+    full = BPMFEngine(cfg).fit(coo)
+    full_art = load_artifact(full.export(str(tmp_path / "full")))
+
+    # re-run the first 3 sweeps per-sweep, emulating the old host accumulator
+    probe = BPMFEngine(cfg.replace(sweeps_per_block=1, checkpoint_dir=None))
+    it = probe.sample(coo)
+    samples = []
+    for _ in range(3):
+        m = next(it)
+        if int(m.sweep) > cfg.run.burn_in:
+            samples.append(tuple(np.asarray(x, np.float32) for x in probe.factors()))
+    hist = np.asarray(
+        [[m.rmse_sample, m.rmse_avg, m.sweep] for m in probe.history], np.float32
+    )
+    old_posterior = {
+        "U_sum": sum(u for u, _ in samples),
+        "V_sum": sum(v for _, v in samples),
+        "count": np.asarray(len(samples), np.int32),
+        "U_samples": np.stack([u for u, _ in samples]),
+        "V_samples": np.stack([v for _, v in samples]),
+    }
+    save_checkpoint(
+        str(tmp_path / "ckpt"), 3,
+        {"state": probe._state, "pred": probe._pred, "history": hist,
+         "posterior": old_posterior},
+    )
+    del probe, it
+
+    resumed = BPMFEngine(cfg)
+    assert resumed.restore(coo) == 3
+    resumed.fit()
+    res_art = load_artifact(resumed.export(str(tmp_path / "resumed")))
+    _artifact_equal(res_art, full_art, msg="pre-block posterior restore")
+
+
+def test_restore_with_larger_keep_reports_only_real_samples(tmp_path):
+    """A checkpoint that retained fewer window samples than the resuming
+    run's ``keep_factor_samples`` (here: keep=0 -> keep=3) must not surface
+    zero-filled buffer slots as posterior samples: the window refills from
+    real post-resume draws and ``num_kept_samples`` counts only those."""
+    coo = _coo(seed=11)
+    ckpt = str(tmp_path / "ckpt")
+    cfg0 = _cfg(num_sweeps=4, burn_in=1, sweeps_per_block=4,
+                keep_factor_samples=0, checkpoint_dir=ckpt)
+    engine = BPMFEngine(cfg0).fit(coo)
+    engine.save()
+    del engine
+
+    cfg1 = cfg0.replace(num_sweeps=6, keep_factor_samples=3)
+    resumed = BPMFEngine(cfg1)
+    assert resumed.restore(coo) == 4
+    meta, arrays = resumed._artifact_payload()
+    assert meta.num_kept_samples == 0  # nothing materialized yet
+    resumed.fit()  # sweeps 5..6, both post-burn-in
+    meta, arrays = resumed._artifact_payload()
+    assert meta.num_mean_samples == 5  # sums survived the keep change
+    assert meta.num_kept_samples == 2
+    assert not np.any(np.all(arrays["U_samples"] == 0, axis=(1, 2)))
+
+
+# ---------- config / plumbing ----------
+
+
+def test_sweeps_per_block_validated():
+    with pytest.raises(ValueError, match="sweeps_per_block"):
+        _cfg(sweeps_per_block=0)
+
+
+def test_block_metrics_single_transfer_counter():
+    """The engine fetches one [block, 3] f32 metrics array per block — the
+    byte counter sees 12 bytes/sweep regardless of block size, and no other
+    per-sweep host traffic exists in the loop."""
+    coo = _coo(seed=2)
+    for spb in (1, 4):
+        engine = BPMFEngine(_cfg(sweeps_per_block=spb, num_sweeps=6)).fit(coo)
+        assert engine.host_metric_bytes == 6 * 3 * 4

@@ -263,11 +263,16 @@ def test_checkpoint_roundtrip_resumes_identically(tmp_path, name):
     For ring_async (depth 2) this is the mid-sweep resume the pipelined
     schedule must survive: the queue is rebuilt from the restored factor
     shards, so no in-flight buffer state needs checkpointing.
+
+    ``sweeps_per_block=3`` makes the manual save land at the end of an
+    executed block (the blocked engine advances a whole block at a time);
+    the resumed run then continues with the default block schedule.
     """
     coo = _small_coo(seed=5)
     extra = {"pipeline_depth": 2} if name == "ring_async" else {}
     cfg = _small_cfg(
-        name=name, num_sweeps=6, checkpoint_dir=str(tmp_path / name), **extra
+        name=name, num_sweeps=6, sweeps_per_block=3,
+        checkpoint_dir=str(tmp_path / name), **extra
     )
 
     full = BPMFEngine(cfg).fit(coo)

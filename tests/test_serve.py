@@ -145,7 +145,9 @@ def test_resumed_run_exports_identical_artifact(tmp_path):
     an interrupted+resumed run exports bitwise the artifact of an
     uninterrupted one."""
     coo = _coo(seed=5)
-    cfg = _cfg(num_sweeps=6, checkpoint_dir=str(tmp_path / "ckpt"))
+    # sweeps_per_block=3: the mid-run save below lands at the end of the
+    # first executed block (sweep 3), not at a sweeps_per_block multiple
+    cfg = _cfg(num_sweeps=6, sweeps_per_block=3, checkpoint_dir=str(tmp_path / "ckpt"))
     full = BPMFEngine(cfg).fit(coo)
     full_path = full.export(str(tmp_path / "full"))
 
@@ -173,7 +175,8 @@ def test_restore_pre_serving_checkpoint(tmp_path):
     subtree) must still resume; the accumulator restarts empty and export
     reflects only post-resume sweeps."""
     coo = _coo(seed=8)
-    cfg = _cfg(num_sweeps=4, checkpoint_dir=str(tmp_path / "ckpt"))
+    # blocks of 2 so the simulated old-schema save below happens at sweep 2
+    cfg = _cfg(num_sweeps=4, sweeps_per_block=2, checkpoint_dir=str(tmp_path / "ckpt"))
     engine = BPMFEngine(cfg)
     it = engine.sample(coo)
     for _ in range(2):
