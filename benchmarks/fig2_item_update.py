@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import OUT_DIR, save_result
+from benchmarks.common import OUT_DIR, save_result, smoke_out_path
 from repro.core import posterior
 from repro.core.balance import fit_cost_model
 from repro.core.types import Bucket, HyperParams
@@ -199,7 +199,7 @@ def _workload_sweep(smoke: bool, max_keys: int = 6) -> dict:
     }
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, out_path: str | None = None) -> dict:
     """Fig2 curves + cost-model fit + kernel autotune sweep; writes JSON."""
     rows = _fig2_rows(smoke)
     nnzs = np.array([r["nnz"] for r in rows], dtype=np.float64)
@@ -212,6 +212,7 @@ def run(smoke: bool = False) -> dict:
 
     out = {
         "device": jax.default_backend(),
+        "smoke": bool(smoke),
         "rows": rows,
         "cost_model": {"fixed_us": cm.fixed, "per_rating_us": cm.per_rating},
         "batched_speedup_at_min_nnz": rows[0]["t_single_chol_s"] / max(rows[0]["t_batched_per_item_s"], 1e-12),
@@ -222,8 +223,10 @@ def run(smoke: bool = False) -> dict:
         ),
     }
     if smoke:
-        # merge into an existing (fuller) artifact instead of shrinking it:
-        # keep its Fig-2 curves / cost model, update only re-measured entries
+        # merge on top of the committed (fuller) artifact instead of
+        # shrinking it — keep its Fig-2 curves / cost model, update only
+        # re-measured entries. The merged result still goes to the smoke
+        # temp path (or --out), never back into the committed JSON.
         path = os.path.join(OUT_DIR, "fig2_item_update.json")
         try:
             with open(path) as f:
@@ -242,16 +245,26 @@ def run(smoke: bool = False) -> dict:
             out = old
         except (OSError, ValueError):
             pass
-    save_result("fig2_item_update", out)
+        out["smoke"] = True  # even when merged over a full artifact
+    path = save_result(
+        "fig2_item_update", out,
+        out=smoke_out_path("fig2_item_update", smoke, out_path),
+    )
+    print(f"[fig2_item_update] wrote {path}")
     return out
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="2 shapes, tiny timing budget; merges into existing JSON")
+                    help="2 shapes, tiny timing budget; merges over the "
+                         "committed JSON, writes to a temp path unless --out")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: the committed "
+                         "experiments/bench file; smoke runs default to a "
+                         "temp path instead)")
     args = ap.parse_args()
-    r = run(smoke=args.smoke)
+    r = run(smoke=args.smoke, out_path=args.out)
     for row in r["rows"]:
         print({k: (f"{v:.2e}" if isinstance(v, float) else v) for k, v in row.items()})
     print("cost model:", r["cost_model"])

@@ -1,26 +1,41 @@
-"""Serving latency benchmark: batch-size sweep over the posterior predictor.
+"""Serving latency benchmarks: isolated batch sweep + closed-loop load.
 
-Trains (or reuses) a serving artifact, loads it through
-``repro.serve.PosteriorPredictor``, and measures end-to-end query latency —
-host batch prep + padded device dispatch + host gather — per batch size,
-plus a top-k catalog-scoring probe. Writes
-``experiments/bench/serve_latency.json`` (schema in
+Two modes over the posterior serving path:
+
+* default — trains (or reuses) a serving artifact, loads it through
+  ``repro.serve.PosteriorPredictor``, and measures end-to-end isolated
+  query latency per batch size plus a top-k catalog probe. Writes
+  ``experiments/bench/serve_latency.json``.
+* ``--load`` — the persistent-server benchmark (DESIGN.md §11): builds a
+  synthetic artifact at the recorded catalog size, measures the
+  item-sharded vs replicated top-k paths head-to-head, then runs
+  closed-loop concurrent clients (each thread issues requests
+  back-to-back through ``repro.serve.ServeClient``) against a live
+  ``BPMFServer`` and records offered qps, p50/p99 under load and
+  micro-batcher occupancy per client count. Writes
+  ``experiments/bench/serve_load.json``.
+
+Smoke runs (``--smoke``) never overwrite the committed JSON: without an
+explicit ``--out`` they write to a temp path (printed). Schemas in
 ``experiments/bench/README.md``, validated by
-``scripts/check_bench_schema.py serve_latency``).
+``scripts/check_bench_schema.py serve_latency`` / ``serve_load``.
 
-    python -m benchmarks.serve_latency            # full sweep
-    python -m benchmarks.serve_latency --smoke    # tiny, for scripts/test.sh
-    python -m benchmarks.serve_latency --artifact /tmp/art   # reuse artifact
+    python -m benchmarks.serve_latency              # full isolated sweep
+    python -m benchmarks.serve_latency --load       # full load benchmark
+    python -m benchmarks.serve_latency --smoke --load --out /tmp/x.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import tempfile
+import threading
 import time
 
 import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import OUT_DIR, save_result, smoke_out_path
 
 
 def _percentiles(times_s: list[float], batch: int) -> dict:
@@ -49,9 +64,214 @@ def build_artifact(args) -> str:
     return engine.export(tempfile.mkdtemp(prefix="bpmf-serve-bench-") + "/artifact")
 
 
+def build_random_artifact(users: int, movies: int, K: int, seed: int = 0) -> str:
+    """Random-factor artifact at a given catalog size (no training) — the
+    serving path only sees arrays, so load benchmarks skip the sampler."""
+    from repro.serve import ArtifactMeta, save_artifact
+
+    rng = np.random.default_rng(seed)
+    meta = ArtifactMeta(
+        num_users=users, num_movies=movies, K=K, mean_rating=3.5,
+        min_rating=1.0, max_rating=5.0, num_mean_samples=8,
+        num_kept_samples=0, backend="synthetic", num_sweeps_done=0, seed=seed,
+    )
+    arrays = {
+        "U_mean": rng.normal(scale=0.5, size=(users, K)).astype(np.float32),
+        "V_mean": rng.normal(scale=0.5, size=(movies, K)).astype(np.float32),
+        "U_samples": np.zeros((0, users, K), np.float32),
+        "V_samples": np.zeros((0, movies, K), np.float32),
+    }
+    directory = tempfile.mkdtemp(prefix="bpmf-serve-load-") + "/artifact"
+    return save_artifact(directory, meta, arrays)
+
+
+def _time_topk(predictor, users_pool, k, repeats, sharded) -> dict:
+    for _ in range(3):
+        predictor.top_k(users_pool[0], k, sharded=sharded)
+    times = []
+    for i in range(repeats):
+        u = users_pool[i % len(users_pool)]
+        t0 = time.perf_counter()
+        predictor.top_k(u, k, sharded=sharded)
+        times.append(time.perf_counter() - t0)
+    return {"k": k, **_percentiles(times, 1)}
+
+
+def _recorded_topk_p99() -> float | None:
+    """p99 of the committed full-catalog top-k probe, if present."""
+    try:
+        with open(os.path.join(OUT_DIR, "serve_latency.json")) as f:
+            payload = json.load(f)
+        return float(payload["top_k"]["p99_ms"])
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+class _ClosedLoopClient(threading.Thread):
+    """One closed-loop client: issue mixed requests back-to-back until told
+    to stop, recording per-request wall latency."""
+
+    def __init__(self, address, meta, seed, stop_event):
+        super().__init__(daemon=True)
+        self.address = address
+        self.meta = meta
+        self.rng = np.random.default_rng(seed)
+        self.stop_event = stop_event
+        self.latencies: list[float] = []
+        self.errors = 0
+        self.issued = 0
+
+    def run(self):
+        from repro.serve import ServeClient
+
+        client = ServeClient(self.address)
+        n_users, n_movies = self.meta.num_users, self.meta.num_movies
+        while not self.stop_event.is_set():
+            # 4:1 predict (batch 4) : top-k — a recommender-shaped mix
+            if self.rng.integers(0, 5) < 4:
+                req = {
+                    "rows": self.rng.integers(0, n_users, 4).tolist(),
+                    "cols": self.rng.integers(0, n_movies, 4).tolist(),
+                }
+            else:
+                req = {"user": int(self.rng.integers(0, n_users)), "k": 10}
+            self.issued += 1
+            t0 = time.perf_counter()
+            try:
+                resp = client.request(req)
+                if "error" in resp:
+                    self.errors += 1
+            except Exception:
+                self.errors += 1
+            self.latencies.append(time.perf_counter() - t0)
+        client.close()
+
+
+def _load_level(address, meta, clients, duration_s) -> dict:
+    from repro.serve import ServeClient
+
+    probe = ServeClient(address)
+    before = probe.stats()["batcher"]
+    stop = threading.Event()
+    threads = [
+        _ClosedLoopClient(address, meta, seed=i, stop_event=stop)
+        for i in range(clients)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    wall = time.perf_counter() - t0
+    after = probe.stats()["batcher"]
+    probe.close()
+
+    lats = [x for t in threads for x in t.latencies]
+    errors = sum(t.errors for t in threads)
+    issued = sum(t.issued for t in threads)
+    d_req = after["requests"] - before["requests"]
+    d_cyc = after["cycles"] - before["cycles"]
+    entry = {
+        "clients": clients,
+        "requests": len(lats),
+        "errors": errors,
+        # issued-but-never-completed (a hung client thread); 0 in a healthy run
+        "dropped": issued - len(lats),
+        "offered_qps": len(lats) / wall,
+        "batcher_occupancy": d_req / d_cyc if d_cyc else 0.0,
+        "coalesced_share": (
+            (after["coalesced_requests"] - before["coalesced_requests"]) / d_req
+            if d_req else 0.0
+        ),
+        **_percentiles(lats, 1),
+    }
+    return entry
+
+
+def run_load(args) -> int:
+    """The --load mode: sharded-vs-replicated top-k + closed-loop qps."""
+    import jax
+
+    from repro.serve import BPMFServer, PosteriorPredictor
+
+    artifact = args.artifact or build_random_artifact(args.users, args.movies, args.K)
+    predictor = PosteriorPredictor.load(artifact)
+    meta = predictor.meta
+    rng = np.random.default_rng(1)
+    users_pool = [int(u) for u in rng.integers(0, meta.num_users, 64)]
+
+    k = min(args.top_k, meta.num_movies)
+    topk = {
+        "replicated": _time_topk(predictor, users_pool, k, args.repeats, sharded=False),
+        "sharded": _time_topk(predictor, users_pool, k, args.repeats, sharded=True),
+    }
+    topk["sharded_vs_replicated_p99_ratio"] = (
+        topk["sharded"]["p99_ms"] / topk["replicated"]["p99_ms"]
+    )
+    recorded = _recorded_topk_p99()
+    if recorded is not None:
+        topk["recorded_full_catalog_p99_ms"] = recorded
+        topk["sharded_beats_recorded"] = topk["sharded"]["p99_ms"] < recorded
+    for name in ("replicated", "sharded"):
+        e = topk[name]
+        print(f"top_{k} {name:10s}: p50 {e['p50_ms']:.3f} ms  p99 {e['p99_ms']:.3f} ms")
+
+    server = BPMFServer(
+        artifact, deadline_ms=args.deadline_ms, topk_mode="auto",
+        watch=False,
+    )
+    host, port = server.start()
+    address = f"{host}:{port}"
+    load = {}
+    try:
+        for clients in [int(c) for c in args.clients.split(",")]:
+            entry = _load_level(address, meta, clients, args.duration)
+            load[str(clients)] = entry
+            print(
+                f"clients {clients:3d}: {entry['offered_qps']:8.0f} req/s  "
+                f"p50 {entry['p50_ms']:.3f} ms  p99 {entry['p99_ms']:.3f} ms  "
+                f"occupancy {entry['batcher_occupancy']:.2f}  "
+                f"errors {entry['errors']}"
+            )
+    finally:
+        server.shutdown()
+
+    payload = {
+        "device": jax.default_backend(),
+        "num_devices": len(jax.devices()),
+        "smoke": bool(args.smoke),
+        "repeats": args.repeats,
+        "deadline_ms": args.deadline_ms,
+        "duration_s": args.duration,
+        "artifact": {
+            "num_users": meta.num_users,
+            "num_movies": meta.num_movies,
+            "K": meta.K,
+            "num_mean_samples": meta.num_mean_samples,
+            "num_kept_samples": meta.num_kept_samples,
+            "backend": meta.backend,
+        },
+        "top_k": topk,
+        "load": load,
+    }
+    path = save_result("serve_load", payload, out=smoke_out_path(
+        "serve_load", args.smoke, args.out))
+    print(f"wrote {path}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="tiny run for CI smoke")
+    ap.add_argument("--load", action="store_true",
+                    help="closed-loop concurrent-client benchmark against a "
+                         "live BPMFServer (writes serve_load.json)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: the committed "
+                         "experiments/bench file; smoke runs default to a "
+                         "temp path instead)")
     ap.add_argument("--artifact", default=None,
                     help="existing artifact directory (skips training)")
     ap.add_argument("--backend", default="sequential")
@@ -64,11 +284,21 @@ def main(argv=None) -> int:
                     help="comma-separated query batch sizes")
     ap.add_argument("--repeats", type=int, default=200)
     ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--clients", default="1,4,16",
+                    help="closed-loop client counts (--load)")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="seconds per client-count level (--load)")
+    ap.add_argument("--deadline-ms", type=float, default=2.0,
+                    help="server micro-batch deadline (--load)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.users, args.movies, args.nnz = 200, 100, 3000
         args.K, args.sweeps = 6, 3
         args.batches, args.repeats = "1,8,64", 25
+        args.clients, args.duration = "1,4", 1.0
+
+    if args.load:
+        return run_load(args)
 
     import jax
 
@@ -123,7 +353,8 @@ def main(argv=None) -> int:
         "batches": batches,
         "top_k": top_k,
     }
-    path = save_result("serve_latency", payload)
+    path = save_result("serve_latency", payload, out=smoke_out_path(
+        "serve_latency", args.smoke, args.out))
     print(f"wrote {path}")
     return 0
 

@@ -25,13 +25,13 @@ multi-device process, e.g.::
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import save_result, smoke_out_path
 
 BLOCK_SIZES = (1, 4, 8)
 BACKENDS = ("sequential", "ring", "ring_async", "allgather")
@@ -73,7 +73,7 @@ def _legacy_emulated(cfg, coo):
     return engine, t, gathered + engine.host_metric_bytes
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, out_path: str | None = None) -> dict:
     from repro.bpmf import BPMFConfig, load_dataset
 
     users = 400 if smoke else 2_000
@@ -146,9 +146,21 @@ def run(smoke: bool = False) -> dict:
         for spb in BLOCK_SIZES
         if spb > 1
     )
-    save_result("sweep_throughput", out)
+    path = save_result(
+        "sweep_throughput", out,
+        out=smoke_out_path("sweep_throughput", smoke, out_path),
+    )
+    print(f"[sweep_throughput] wrote {path}")
     return out
 
 
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload; writes to a temp path unless --out")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: the committed "
+                         "experiments/bench file; smoke runs default to a "
+                         "temp path instead)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

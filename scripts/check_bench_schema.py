@@ -5,11 +5,20 @@ Usage: ``python scripts/check_bench_schema.py <name> [<name> ...]`` where
 ``<name>`` is an artifact basename (``fig2_item_update``, ``fig5_overlap``).
 Checks the structural invariants documented in ``experiments/bench/README.md``
 — required keys, entry shapes, value domains — and exits non-zero with a
-list of violations. ``scripts/test.sh --autotune-smoke`` runs it after the
-fig2 driver.
+list of violations. ``scripts/test.sh`` smoke stanzas run it after each
+benchmark.
+
+With ``--path FILE`` (one name only) the payload is read from ``FILE``
+instead of the committed ``experiments/bench/<name>.json`` — how the smoke
+stanzas validate their temp-path outputs. Committed artifacts (no
+``--path``) are additionally held to the smoke regression contract: any
+payload that defines ``"smoke"`` must have it ``false``, and the
+benchmarks that stamp the flag (:data:`SMOKE_STAMPED`) must define it — a
+smoke run that clobbered a committed JSON fails here.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -17,6 +26,10 @@ import sys
 BENCH_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "experiments", "bench")
 
 IMPLS = ("pallas_fused", "pallas", "xla")
+
+# benchmarks whose payloads always carry a "smoke" flag: their committed
+# JSON must define it (and, like every committed file, have it false)
+SMOKE_STAMPED = ("serve_latency", "serve_load", "sweep_throughput")
 
 
 def check_fig2_item_update(payload: dict) -> list[str]:
@@ -159,25 +172,90 @@ def check_sweep_throughput(payload: dict) -> list[str]:
     return errs
 
 
+def check_serve_load(payload: dict) -> list[str]:
+    """Schema of serve_load.json (closed-loop server load benchmark)."""
+    errs: list[str] = []
+    if payload.get("device") not in ("cpu", "gpu", "tpu"):
+        errs.append(f"device: unexpected {payload.get('device')!r}")
+    lat_keys = ("p50_ms", "p99_ms", "mean_ms")
+    tk = payload.get("top_k")
+    if not isinstance(tk, dict):
+        errs.append("top_k: missing")
+    else:
+        for mode in ("replicated", "sharded"):
+            e = tk.get(mode)
+            if not isinstance(e, dict) or any(
+                not isinstance(e.get(k), (int, float)) or e.get(k, 0) <= 0
+                for k in lat_keys
+            ):
+                errs.append(f"top_k.{mode}: needs positive numeric {lat_keys}")
+        # acceptance bar: when the committed full-catalog probe is present,
+        # the item-sharded path must beat its recorded p99
+        if "recorded_full_catalog_p99_ms" in tk and tk.get("sharded_beats_recorded") is not True:
+            errs.append(
+                "top_k.sharded_beats_recorded: False — sharded top-k p99 "
+                f"({tk.get('sharded', {}).get('p99_ms')}) does not beat the "
+                f"recorded full-catalog p99 "
+                f"({tk.get('recorded_full_catalog_p99_ms')})"
+            )
+    load = payload.get("load")
+    if not isinstance(load, dict) or not load:
+        errs.append("load: missing or empty")
+        return errs
+    for name, e in load.items():
+        where = f"load[{name}]"
+        if not name.isdigit() or int(name) < 1:
+            errs.append(f"{where}: key must be a positive client count")
+            continue
+        for k in ("requests", "offered_qps", "batcher_occupancy", *lat_keys):
+            if not isinstance(e.get(k), (int, float)) or e.get(k, 0) <= 0:
+                errs.append(f"{where}.{k}: missing or non-positive")
+        # the hard serving contract: no request errors, none dropped
+        for k in ("errors", "dropped"):
+            if e.get(k) != 0:
+                errs.append(f"{where}.{k}: {e.get(k)!r} (must be 0)")
+    return errs
+
+
 CHECKERS = {
     "fig2_item_update": check_fig2_item_update,
     "fig5_overlap": check_fig5_overlap,
     "serve_latency": check_serve_latency,
+    "serve_load": check_serve_load,
     "sweep_throughput": check_sweep_throughput,
 }
 
 
+def check_smoke_flag(name: str, payload: dict) -> list[str]:
+    """Committed-artifact regression: smoke output must never land here."""
+    errs: list[str] = []
+    if name in SMOKE_STAMPED and "smoke" not in payload:
+        errs.append('smoke: key missing (benchmark stamps it; stale artifact?)')
+    if payload.get("smoke", False):
+        errs.append('smoke: true — a smoke run overwrote the committed JSON')
+    return errs
+
+
 def main(argv: list[str]) -> int:
-    if not argv:
-        print(f"usage: {sys.argv[0]} <artifact-name> [...]; known: {sorted(CHECKERS)}")
-        return 2
+    ap = argparse.ArgumentParser(
+        description="validate experiments/bench JSON artifacts",
+    )
+    ap.add_argument("names", nargs="+", metavar="name",
+                    help=f"artifact basename; known: {sorted(CHECKERS)}")
+    ap.add_argument("--path", default=None,
+                    help="read the payload from this file instead of the "
+                         "committed experiments/bench/<name>.json (one name "
+                         "only; skips the committed smoke-flag regression)")
+    args = ap.parse_args(argv)
+    if args.path and len(args.names) != 1:
+        ap.error("--path takes exactly one artifact name")
     rc = 0
-    for name in argv:
+    for name in args.names:
         if name not in CHECKERS:
             print(f"{name}: no schema checker (known: {sorted(CHECKERS)})")
             rc = 1
             continue
-        path = os.path.normpath(os.path.join(BENCH_DIR, f"{name}.json"))
+        path = args.path or os.path.normpath(os.path.join(BENCH_DIR, f"{name}.json"))
         try:
             with open(path) as f:
                 payload = json.load(f)
@@ -186,6 +264,8 @@ def main(argv: list[str]) -> int:
             rc = 1
             continue
         errs = CHECKERS[name](payload)
+        if not args.path:
+            errs += check_smoke_flag(name, payload)
         if errs:
             print(f"{name}: schema FAILED ({len(errs)} violation(s))")
             for e in errs:

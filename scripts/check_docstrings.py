@@ -26,6 +26,11 @@ MODULES = (
     "repro.serve",
     "repro.serve.artifact",
     "repro.serve.predictor",
+    "repro.serve.schema",
+    "repro.serve.batcher",
+    "repro.serve.sharded_topk",
+    "repro.serve.server",
+    "repro.serve.client",
 )
 
 # symbols defined under these packages are held to the coverage bar;

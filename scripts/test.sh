@@ -20,6 +20,16 @@
 #                                       #   sweeps_per_block=4) -> export ->
 #                                       #   serve one-shot; sweep_throughput
 #                                       #   --smoke + JSON schema check
+#   scripts/test.sh --server-smoke      # + train -> export -> persistent
+#                                       #   serve_server -> concurrent client
+#                                       #   burst -> hot-swap re-export ->
+#                                       #   clean shutdown; serve_load --smoke
+#                                       #   + JSON schema check
+#
+# Benchmark smoke runs write to temp --out paths (never the committed
+# experiments/bench JSONs); each stanza schema-checks its temp output via
+# --path AND re-checks the committed artifact, which must carry
+# "smoke": false (scripts/check_bench_schema.py).
 #
 # Always runs the public-API docstring-coverage gate
 # (scripts/check_docstrings.py) before pytest.
@@ -35,6 +45,7 @@ BENCH_SMOKE=0
 AUTOTUNE_SMOKE=0
 SERVE_SMOKE=0
 BLOCK_SMOKE=0
+SERVER_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
@@ -45,6 +56,8 @@ for a in "$@"; do
     SERVE_SMOKE=1
   elif [[ "$a" == "--block-smoke" ]]; then
     BLOCK_SMOKE=1
+  elif [[ "$a" == "--server-smoke" ]]; then
+    SERVER_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -61,8 +74,11 @@ fi
 
 if [[ "$AUTOTUNE_SMOKE" == 1 ]]; then
   echo "== autotune smoke: fig2 driver, 2 shapes, tiny budget =="
-  python -m benchmarks.fig2_item_update --smoke
+  FIG2_TMP="$(mktemp -d)"
+  python -m benchmarks.fig2_item_update --smoke --out "$FIG2_TMP/fig2_item_update.json"
+  python scripts/check_bench_schema.py fig2_item_update --path "$FIG2_TMP/fig2_item_update.json"
   python scripts/check_bench_schema.py fig2_item_update
+  rm -rf "$FIG2_TMP"
   echo "== use_pallas deprecation shim: must warn exactly once =="
   # intentionally a fresh process (unlike the pytest variant, which has to
   # monkeypatch the warn-once flag): checks the real once-per-process gate
@@ -93,7 +109,9 @@ if [[ "$SERVE_SMOKE" == 1 ]]; then
   printf '{"rows": [3, 4], "cols": [5, 6]}\n{"user": 1, "k": 3}\n' | \
     python -m repro.launch.serve --artifact "$ART" --jsonl
   echo "== serve latency smoke + schema check =="
-  python -m benchmarks.serve_latency --smoke --artifact "$ART"
+  python -m benchmarks.serve_latency --smoke --artifact "$ART" \
+    --out "$SERVE_TMP/serve_latency.json"
+  python scripts/check_bench_schema.py serve_latency --path "$SERVE_TMP/serve_latency.json"
   python scripts/check_bench_schema.py serve_latency
   rm -rf "$SERVE_TMP"
 fi
@@ -108,9 +126,111 @@ if [[ "$BLOCK_SMOKE" == 1 ]]; then
     --export-artifact "$BART"
   python -m repro.launch.serve --artifact "$BART" --rows 0,1,2 --cols 0,1,2 --std
   echo "== sweep_throughput smoke + schema check =="
-  python -m benchmarks.sweep_throughput --smoke
+  python -m benchmarks.sweep_throughput --smoke --out "$BLOCK_TMP/sweep_throughput.json"
+  python scripts/check_bench_schema.py sweep_throughput --path "$BLOCK_TMP/sweep_throughput.json"
   python scripts/check_bench_schema.py sweep_throughput
   rm -rf "$BLOCK_TMP"
+fi
+
+if [[ "$SERVER_SMOKE" == 1 ]]; then
+  echo "== server smoke: train -> export -> persistent server =="
+  SRV_TMP="$(mktemp -d)"
+  SART="$SRV_TMP/artifact"
+  python -m repro.launch.bpmf --backend sequential --dataset synthetic \
+    --sweeps 2 --burn-in 1 --K 4 --users 80 --movies 40 --nnz 800 \
+    --export-artifact "$SART"
+  python -m repro.launch.serve_server --artifact "$SART" --port 0 \
+    --poll-interval 0.2 >"$SRV_TMP/server.log" 2>&1 &
+  SRV_PID=$!
+  trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+  ADDR=""
+  for _ in $(seq 150); do
+    ADDR="$(sed -n 's,.*http://\([0-9.]*:[0-9]*\).*,\1,p' "$SRV_TMP/server.log" | head -1)"
+    [[ -n "$ADDR" ]] && break
+    kill -0 "$SRV_PID" 2>/dev/null || break
+    sleep 0.2
+  done
+  if [[ -z "$ADDR" ]]; then
+    echo "server did not start:"; cat "$SRV_TMP/server.log"; exit 1
+  fi
+  echo "== concurrent client burst against $ADDR =="
+  python - "$ADDR" <<'PY'
+import sys, threading
+import numpy as np
+from repro.serve import ServeClient
+
+addr = sys.argv[1]
+errors = []
+
+def worker(i):
+    c = ServeClient(addr)
+    rng = np.random.default_rng(i)
+    for _ in range(25):
+        r = c.request({"rows": rng.integers(0, 80, 3).tolist(),
+                       "cols": rng.integers(0, 40, 3).tolist()})
+        if "error" in r or len(r.get("predictions", [])) != 3:
+            errors.append(r)
+        r = c.request({"user": int(rng.integers(0, 80)), "k": 5})
+        if "error" in r or len(r.get("items", [])) != 5:
+            errors.append(r)
+    c.close()
+
+threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+for t in threads: t.start()
+for t in threads: t.join()
+assert not errors, errors[:3]
+st = ServeClient(addr).stats()["batcher"]
+print(f"burst OK: {st['requests']} requests in {st['cycles']} cycles "
+      f"(occupancy {st['occupancy']:.2f})")
+PY
+  python -m repro.launch.serve --server "$ADDR" --user 0 --top-k 5
+  echo "== hot-swap: re-export into the live artifact dir =="
+  python -m repro.launch.bpmf --backend sequential --dataset synthetic \
+    --sweeps 4 --burn-in 1 --K 4 --users 80 --movies 40 --nnz 800 \
+    --export-artifact "$SART"
+  python - "$ADDR" <<'PY'
+import sys, threading, time
+import numpy as np
+from repro.serve import ServeClient
+
+addr = sys.argv[1]
+stop = threading.Event()
+errors = []
+
+def hammer(i):
+    c = ServeClient(addr)
+    rng = np.random.default_rng(i)
+    while not stop.is_set():
+        r = c.request({"user": int(rng.integers(0, 80)), "k": 5})
+        if "error" in r:
+            errors.append(r)
+    c.close()
+
+threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+for t in threads: t.start()
+probe = ServeClient(addr)
+deadline = time.time() + 60
+h = probe.health()
+while h["generation"] < 1 and time.time() < deadline:
+    time.sleep(0.2)
+    h = probe.health()
+stop.set()
+for t in threads: t.join()
+assert h["generation"] >= 1, f"no hot-swap observed: {h}"
+assert h["swap_failures"] == 0, h
+assert not errors, errors[:3]
+print(f"hot-swap OK: generation {h['generation']}, "
+      "zero request errors under concurrent load")
+PY
+  kill -TERM "$SRV_PID"
+  wait "$SRV_PID"
+  trap - EXIT
+  grep -q "server stopped cleanly" "$SRV_TMP/server.log"
+  echo "clean shutdown OK"
+  echo "== serve_load smoke + schema check =="
+  python -m benchmarks.serve_latency --smoke --load --out "$SRV_TMP/serve_load.json"
+  python scripts/check_bench_schema.py serve_load --path "$SRV_TMP/serve_load.json"
+  rm -rf "$SRV_TMP"
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

@@ -1,4 +1,4 @@
-"""BPMF serving CLI: answer rating queries from an exported artifact.
+"""BPMF serving CLI: answer rating queries from an artifact or a server.
 
 One-shot query mode (JSON on stdout)::
 
@@ -11,11 +11,20 @@ stdout line (a minimal sidecar-friendly serving loop)::
     printf '{"rows": [0, 1], "cols": [5, 6]}\n{"user": 7, "k": 3}\n' | \\
         python -m repro.launch.serve --artifact /tmp/bpmf-art --jsonl
 
+Client mode: ``--server host:port`` (instead of ``--artifact``) sends the
+same requests to a running ``python -m repro.launch.serve_server`` — the
+identical request/response schema (:mod:`repro.serve.schema`) drives either
+the in-process predictor or the persistent server, so scripts can switch
+transports with one flag::
+
+    python -m repro.launch.serve --server 127.0.0.1:8642 --user 7 --top-k 10
+
 Requests: ``{"rows": [...], "cols": [...], "std": bool?}`` for point
-predictions, ``{"user": id, "k": n}`` for top-k. Malformed requests yield
-``{"error": ...}`` responses; the loop keeps serving. ``--devices N``
-forces N host devices before jax initializes (same contract as
-``repro.launch.bpmf``) so the mesh-sharded batch path is exercisable on CPU.
+predictions, ``{"user": id, "k": n}`` (or ``{"users": [...], "k": n}``)
+for top-k. Malformed requests yield ``{"error": ...}`` responses; the loop
+keeps serving. ``--devices N`` forces N host devices before jax
+initializes (same contract as ``repro.launch.bpmf``) so the mesh-sharded
+batch path is exercisable on CPU.
 
 The LM prefill/decode driver that previously lived here moved with its
 step builders to ``repro.training.lm_serve`` (dry-run tooling only).
@@ -32,11 +41,15 @@ from repro.launch.hostdevices import force_host_device_count
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.launch.serve",
-        description="Serve posterior-mean BPMF predictions from an exported artifact.",
+        description="Serve posterior-mean BPMF predictions from an exported "
+                    "artifact, or query a running serve_server.",
     )
-    p.add_argument("--artifact", required=True,
+    p.add_argument("--artifact", default=None,
                    help="artifact directory written by BPMFEngine.export() / "
                         "repro.launch.bpmf --export-artifact")
+    p.add_argument("--server", default=None, metavar="HOST:PORT",
+                   help="query a running repro.launch.serve_server instead "
+                        "of loading an artifact in-process")
     p.add_argument("--rows", default=None,
                    help="comma-separated user ids for a one-shot prediction batch")
     p.add_argument("--cols", default=None,
@@ -62,52 +75,73 @@ def _parse_ids(text: str, flag: str) -> list[int]:
         raise SystemExit(f"{flag} must be a comma-separated id list: {e}")
 
 
-def _handle(predictor, req: dict) -> dict:
-    """One request -> one response dict (predict or top_k)."""
-    if "rows" in req or "cols" in req:
-        preds = predictor.predict(
-            req.get("rows", ()), req.get("cols", ()), return_std=bool(req.get("std"))
-        )
-        if isinstance(preds, tuple):
-            preds, std = preds
-            return {"predictions": preds.tolist(), "std": std.tolist()}
-        return {"predictions": preds.tolist()}
-    if "user" in req:
-        ids, scores = predictor.top_k(int(req["user"]), int(req.get("k", 10)))
-        return {"user": int(req["user"]), "items": ids.tolist(),
-                "scores": scores.tolist()}
-    return {"error": "request needs either rows/cols or user"}
-
-
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
+    if (args.artifact is None) == (args.server is None):
+        print("exactly one of --artifact or --server is required", file=sys.stderr)
+        return 2
 
     force_host_device_count(args.devices)
 
     # heavy imports only after XLA_FLAGS is settled
-    from repro.serve import ArtifactError, PosteriorPredictor
-
-    try:
-        predictor = PosteriorPredictor.load(args.artifact)
-    except ArtifactError as e:
-        print(f"cannot load artifact: {e}", file=sys.stderr)
-        return 1
-    meta = predictor.meta
-    print(
-        f"serving artifact {args.artifact}: R {meta.num_users} x "
-        f"{meta.num_movies}, K={meta.K}, backend={meta.backend}, "
-        f"{meta.num_mean_samples} posterior samples averaged, "
-        f"{meta.num_kept_samples} kept for std",
-        file=sys.stderr,
+    from repro.serve import (
+        ArtifactError,
+        PosteriorPredictor,
+        RequestError,
+        ServeClient,
+        ServeConnectionError,
+        parse_request,
+        run_request,
     )
+    from repro.serve.schema import error_response
 
-    def handle_safe(req: dict) -> dict:
-        # invalid queries (out-of-range ids, --std without retained samples)
-        # become error responses in every mode, never tracebacks
+    if args.server is not None:
         try:
-            return _handle(predictor, req)
-        except (ValueError, KeyError, TypeError) as e:
-            return {"error": f"{type(e).__name__}: {e}"}
+            client = ServeClient(args.server)
+            health = client.health()
+        except (ValueError, ServeConnectionError) as e:
+            print(f"cannot reach server: {e}", file=sys.stderr)
+            return 1
+        art = health.get("artifact", {})
+        print(
+            f"querying server {args.server}: R {art.get('num_users')} x "
+            f"{art.get('num_movies')}, K={art.get('K')}, "
+            f"backend={art.get('backend')}, "
+            f"generation={health.get('generation')}",
+            file=sys.stderr,
+        )
+
+        def handle_safe(req: dict) -> dict:
+            # server-side validation comes back as an {"error": ...} body;
+            # transport failures become error responses too, so the JSONL
+            # loop keeps serving
+            try:
+                return client.request(req)
+            except ServeConnectionError as e:
+                return {"error": f"{type(e).__name__}: {e}"}
+    else:
+        try:
+            predictor = PosteriorPredictor.load(args.artifact)
+        except ArtifactError as e:
+            print(f"cannot load artifact: {e}", file=sys.stderr)
+            return 1
+        meta = predictor.meta
+        print(
+            f"serving artifact {args.artifact}: R {meta.num_users} x "
+            f"{meta.num_movies}, K={meta.K}, backend={meta.backend}, "
+            f"{meta.num_mean_samples} posterior samples averaged, "
+            f"{meta.num_kept_samples} kept for std",
+            file=sys.stderr,
+        )
+
+        def handle_safe(req: dict) -> dict:
+            # invalid queries (bad shapes, out-of-range ids, --std without
+            # retained samples) become error responses in every mode,
+            # never tracebacks — same schema the server speaks
+            try:
+                return run_request(predictor, parse_request(req))
+            except (RequestError, ValueError, KeyError, TypeError) as e:
+                return error_response(e)
 
     if args.jsonl:
         for line in sys.stdin:

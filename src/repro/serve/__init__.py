@@ -5,8 +5,16 @@ The post-training half of the ROADMAP's "serve heavy traffic" north star:
 artifact (:mod:`repro.serve.artifact`), and :class:`PosteriorPredictor`
 (:mod:`repro.serve.predictor`) loads it into a jit-compiled, mesh-sharded
 batch predictor — ``predict(rows, cols)`` and ``top_k(user, k)`` with
-optional predictive-std output, no sampler in the process. CLI:
-``python -m repro.launch.serve``; architecture notes in DESIGN.md §9.
+optional predictive-std output, no sampler in the process. On top of the
+predictor sits the persistent serving server
+(:class:`repro.serve.server.BPMFServer`): adaptive micro-batching
+(:mod:`repro.serve.batcher`), item-sharded catalog top-k
+(:mod:`repro.serve.sharded_topk`) and zero-downtime artifact hot-swap, all
+speaking one request/response schema (:mod:`repro.serve.schema`) shared
+with the CLIs and :class:`repro.serve.client.ServeClient`. CLIs:
+``python -m repro.launch.serve`` (one-shot / JSONL / ``--server`` client
+mode) and ``python -m repro.launch.serve_server``; architecture notes in
+DESIGN.md §9 and §11.
 """
 from repro.serve.artifact import (
     ARRAY_KEYS,
@@ -19,7 +27,15 @@ from repro.serve.artifact import (
     load_artifact,
     save_artifact,
 )
-from repro.serve.predictor import PosteriorPredictor, serve_mesh
+from repro.serve.batcher import MicroBatcher
+from repro.serve.client import (
+    ServeClient,
+    ServeConnectionError,
+    ServeRequestError,
+)
+from repro.serve.predictor import PosteriorPredictor, PredictorHandle, serve_mesh
+from repro.serve.schema import RequestError, parse_request, run_request
+from repro.serve.server import BPMFServer
 
 __all__ = [
     "ARRAY_KEYS",
@@ -29,8 +45,17 @@ __all__ = [
     "ArtifactMeta",
     "ArtifactNotFoundError",
     "ArtifactSchemaError",
+    "BPMFServer",
+    "MicroBatcher",
     "PosteriorPredictor",
+    "PredictorHandle",
+    "RequestError",
+    "ServeClient",
+    "ServeConnectionError",
+    "ServeRequestError",
     "load_artifact",
+    "parse_request",
+    "run_request",
     "save_artifact",
     "serve_mesh",
 ]

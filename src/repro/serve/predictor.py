@@ -28,9 +28,11 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.serve.artifact import ArtifactMeta, load_artifact
+from repro.serve.sharded_topk import build_local_topk, merge_topk, shard_items
 from repro.utils import next_power_of_two, round_up
 
 _MIN_PAD = 32  # smallest query pad class: batches 1..32 share one program
+_AUTO_SHARD_MIN_ITEMS = 1024  # topk_mode="auto": shard catalogs at least this big
 
 
 @functools.partial(jax.jit, static_argnames=("lo", "hi"))
@@ -87,6 +89,7 @@ class PosteriorPredictor:
         meta: ArtifactMeta,
         arrays: dict[str, np.ndarray],
         mesh: Mesh | None = None,
+        topk_mode: str = "auto",
     ):
         """Place the posterior summary on the serve mesh.
 
@@ -95,9 +98,21 @@ class PosteriorPredictor:
             arrays: ``U_mean``/``V_mean``/``U_samples``/``V_samples`` host
                 arrays in the shapes ``meta`` promises.
             mesh: Serve mesh; ``None`` builds one over all visible devices.
+            topk_mode: Default ``top_k`` execution — ``"replicated"``
+                (full-catalog scan on every device), ``"sharded"``
+                (item-sharded ``V`` + per-shard top-k + host merge,
+                DESIGN.md §11) or ``"auto"`` (sharded when the mesh has
+                more than one device and the catalog is large enough for
+                the shard pass to win). Per-call override via
+                ``top_k(..., sharded=...)``.
         """
+        if topk_mode not in ("auto", "replicated", "sharded"):
+            raise ValueError(
+                f"topk_mode must be auto|replicated|sharded, got {topk_mode!r}"
+            )
         self.meta = meta
         self.mesh = mesh if mesh is not None else serve_mesh()
+        self.topk_mode = topk_mode
         self._replicated = NamedSharding(self.mesh, P())
         self._batch_sharded = NamedSharding(self.mesh, P("serve"))
         put = functools.partial(jax.device_put, device=self._replicated)
@@ -106,15 +121,22 @@ class PosteriorPredictor:
         self._Us = put(np.asarray(arrays["U_samples"], np.float32))
         self._Vs = put(np.asarray(arrays["V_samples"], np.float32))
         self._mean = put(np.asarray(meta.mean_rating, np.float32))
+        # item-sharded top-k state, built lazily on the first sharded call
+        self._V_sharded: jax.Array | None = None
+        self._local_topk = None
 
     # ------------------------------------------------------------------
     @classmethod
-    def load(cls, directory: str, mesh: Mesh | None = None) -> "PosteriorPredictor":
+    def load(
+        cls, directory: str, mesh: Mesh | None = None, topk_mode: str = "auto"
+    ) -> "PosteriorPredictor":
         """Load a predictor from an artifact directory.
 
         Args:
             directory: Artifact written by ``BPMFEngine.export()``.
             mesh: Optional serve mesh (default: all visible devices).
+            topk_mode: Default ``top_k`` execution mode (see
+                :meth:`__init__`).
 
         Returns:
             A ready predictor.
@@ -124,7 +146,7 @@ class PosteriorPredictor:
                 :mod:`repro.serve.artifact`.
         """
         meta, arrays = load_artifact(directory)
-        return cls(meta, arrays, mesh)
+        return cls(meta, arrays, mesh, topk_mode=topk_mode)
 
     @classmethod
     def from_engine(cls, engine, mesh: Mesh | None = None) -> "PosteriorPredictor":
@@ -209,14 +231,41 @@ class PosteriorPredictor:
         )[:B]
         return preds, std
 
+    def _use_sharded_topk(self, sharded: bool | None) -> bool:
+        if sharded is not None:
+            return bool(sharded)
+        if self.topk_mode == "auto":
+            return (
+                self.mesh.devices.size > 1
+                and self.meta.num_movies >= _AUTO_SHARD_MIN_ITEMS
+            )
+        return self.topk_mode == "sharded"
+
+    def _top_k_sharded(
+        self, users_padded: jax.Array, k: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-shard device top-k over the item-sharded catalog + host merge."""
+        if self._V_sharded is None:
+            self._V_sharded = shard_items(np.asarray(self._V), self.mesh)
+            self._local_topk = build_local_topk(self.mesh, self.meta.num_movies)
+        lo, hi = self.meta.min_rating, self.meta.max_rating
+        cand_ids, cand_vals = self._local_topk(
+            self._U, self._V_sharded, users_padded, self._mean, k, lo, hi
+        )
+        return merge_topk(np.asarray(cand_ids), np.asarray(cand_vals), k)
+
     def top_k(
-        self, user: int | np.ndarray, k: int
+        self, user: int | np.ndarray, k: int, sharded: bool | None = None
     ) -> tuple[np.ndarray, np.ndarray]:
         """Highest-scoring movies for one user (or a batch of users).
 
         Args:
             user: A user id, or a ``[B]`` array of user ids.
             k: Number of movies to return (clamped to the catalog size).
+            sharded: Force the item-sharded (``True``) or replicated
+                (``False``) program; ``None`` follows the constructor's
+                ``topk_mode``. Both return the same ranking (sharded merge
+                reproduces ``jax.lax.top_k`` ordering incl. tie-breaks).
 
         Returns:
             ``(ids, scores)`` — ``[k]`` arrays for a scalar ``user``,
@@ -231,9 +280,66 @@ class PosteriorPredictor:
         scalar = np.ndim(user) == 0
         users = self._queries(np.atleast_1d(np.asarray(user)), self.meta.num_users, "user")
         pad = self._pad_class(users.size)
-        u = self._pad_sharded(users, pad)
-        lo, hi = self.meta.min_rating, self.meta.max_rating
-        ids, vals = _top_k(self._U, self._V, u, self._mean, k, lo, hi)
+        if self._use_sharded_topk(sharded):
+            # item-sharded path: the user batch is REPLICATED (every shard
+            # scores all users against its item slab), so pad via the
+            # replicated sharding instead of the batch-sharded one
+            u_host = np.zeros((pad,), np.int32)
+            u_host[: users.size] = users
+            u = jax.device_put(u_host, self._replicated)
+            ids, vals = self._top_k_sharded(u, k)
+        else:
+            u = self._pad_sharded(users, pad)
+            lo, hi = self.meta.min_rating, self.meta.max_rating
+            ids, vals = _top_k(self._U, self._V, u, self._mean, k, lo, hi)
         ids = np.asarray(ids)[: users.size]
         vals = np.asarray(vals)[: users.size]
         return (ids[0], vals[0]) if scalar else (ids, vals)
+
+
+class PredictorHandle:
+    """Atomically swappable reference to the live :class:`PosteriorPredictor`.
+
+    The hot-swap primitive of the serving server (DESIGN.md §11): request
+    handlers read the current predictor with :meth:`get` exactly once per
+    coalesced batch, and :meth:`swap` replaces it in a single reference
+    assignment (atomic under the GIL) — so every batch runs start-to-finish
+    against one posterior, in-flight batches drain on the artifact they
+    started with, and no request ever observes a half-loaded artifact
+    (the new predictor is fully constructed *before* the swap).
+    """
+
+    def __init__(self, predictor: PosteriorPredictor):
+        """Wrap the initial predictor at generation 0.
+
+        Args:
+            predictor: The predictor to serve until the first swap.
+        """
+        self._current: tuple[PosteriorPredictor, int] = (predictor, 0)
+
+    @property
+    def generation(self) -> int:
+        """Completed swaps (0 = the artifact the server started with)."""
+        return self._current[1]
+
+    def get(self) -> PosteriorPredictor:
+        """The live predictor (one atomic read — call once per batch)."""
+        return self._current[0]
+
+    def get_with_generation(self) -> tuple[PosteriorPredictor, int]:
+        """Consistent ``(predictor, generation)`` pair in one atomic read."""
+        return self._current
+
+    def swap(self, predictor: PosteriorPredictor) -> int:
+        """Atomically publish a new predictor.
+
+        Args:
+            predictor: Fully-constructed (validated + device-resident)
+                replacement.
+
+        Returns:
+            The new generation number.
+        """
+        gen = self._current[1] + 1
+        self._current = (predictor, gen)
+        return gen

@@ -1,0 +1,392 @@
+"""Persistent serving server tests: micro-batcher semantics, coalesced
+bitwise parity, item-sharded top-k, artifact hot-swap atomicity, and the
+HTTP round-trip (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    ArtifactMeta,
+    BPMFServer,
+    MicroBatcher,
+    PosteriorPredictor,
+    PredictorHandle,
+    RequestError,
+    ServeClient,
+    ServeRequestError,
+    parse_request,
+    run_request,
+    save_artifact,
+)
+from repro.serve.client import parse_address
+from repro.serve.schema import PredictRequest, TopKRequest
+
+USERS, MOVIES, K = 64, 37, 4  # 37 items: not a multiple of the 8-dev mesh
+
+
+def _meta(**kw) -> ArtifactMeta:
+    base = dict(
+        num_users=USERS, num_movies=MOVIES, K=K, mean_rating=3.5,
+        min_rating=1.0, max_rating=5.0, num_mean_samples=4,
+        num_kept_samples=0, backend="synthetic", num_sweeps_done=5, seed=0,
+    )
+    base.update(kw)
+    return ArtifactMeta(**base)
+
+
+def _arrays(seed: int) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        "U_mean": rng.normal(scale=0.5, size=(USERS, K)).astype(np.float32),
+        "V_mean": rng.normal(scale=0.5, size=(MOVIES, K)).astype(np.float32),
+        "U_samples": np.zeros((0, USERS, K), np.float32),
+        "V_samples": np.zeros((0, MOVIES, K), np.float32),
+    }
+
+
+@pytest.fixture()
+def artifact(tmp_path):
+    return save_artifact(str(tmp_path / "artifact"), _meta(), _arrays(seed=1))
+
+
+# ---------- request schema ----------
+
+
+@pytest.mark.parametrize("payload", [
+    "not a dict",
+    {},
+    {"rows": [0, 1], "cols": [0]},          # length mismatch
+    {"rows": [], "cols": []},               # empty batch
+    {"rows": [0], "cols": ["x"]},           # non-integer ids
+    {"user": 0, "users": [1], "k": 3},      # both scalar and batch form
+    {"user": [0, 1], "k": 3},               # scalar form with a batch
+    {"users": [], "k": 3},                  # empty users
+    {"users": [0], "k": 0},                 # non-positive k
+    {"users": [0], "k": True},              # bool is not an int here
+])
+def test_parse_request_rejects(payload):
+    with pytest.raises(RequestError):
+        parse_request(payload)
+
+
+def test_parse_request_shapes():
+    req = parse_request({"rows": [0, 1], "cols": [2, 3], "std": True})
+    assert isinstance(req, PredictRequest)
+    assert req.std and req.size == 2 and req.batch_key() == ("predict", True)
+    req = parse_request({"user": 7, "k": 3})
+    assert isinstance(req, TopKRequest)
+    assert req.scalar and req.size == 1 and req.batch_key() == ("top_k", 3)
+    req = parse_request({"users": [7, 8]})  # k defaults to 10
+    assert not req.scalar and req.batch_key() == ("top_k", 10)
+
+
+# ---------- micro-batcher (no device code) ----------
+
+
+def _echo_group(key, requests):
+    return [(key, r) for r in requests]
+
+
+def test_batcher_groups_by_key_and_preserves_order():
+    calls = []
+
+    def run_group(key, requests):
+        calls.append((key, len(requests)))
+        return [(key, r) for r in requests]
+
+    b = MicroBatcher(run_group, deadline_ms=80.0, adaptive=False)
+    try:
+        reqs = [
+            parse_request({"rows": [0], "cols": [1]}),
+            parse_request({"user": 2, "k": 3}),
+            parse_request({"rows": [4, 5], "cols": [6, 7]}),
+            parse_request({"user": 8, "k": 3}),
+        ]
+        tickets = [b.submit(r) for r in reqs]
+        results = [t.wait(timeout=10) for t in tickets]
+    finally:
+        b.stop()
+    # one cycle, one group call per distinct key, members in submit order
+    assert sorted(calls) == [(("predict", False), 2), (("top_k", 3), 2)]
+    for r, (key, got) in zip(reqs, results):
+        assert key == r.batch_key() and got is r
+    s = b.stats()
+    assert s["cycles"] == 1 and s["requests"] == 4 and s["coalesced_requests"] == 4
+
+
+def test_batcher_max_batch_dispatches_early():
+    # deadline is far away: only the row cap can release the batch in time
+    b = MicroBatcher(_echo_group, deadline_ms=60_000.0, max_batch=4, adaptive=False)
+    try:
+        t1 = b.submit(parse_request({"rows": [0, 1], "cols": [0, 1]}))
+        t2 = b.submit(parse_request({"rows": [2, 3], "cols": [2, 3]}))
+        t1.wait(timeout=10)
+        t2.wait(timeout=10)
+    finally:
+        b.stop()
+
+
+def test_batcher_adaptive_skips_deadline_when_idle():
+    b = MicroBatcher(_echo_group, deadline_ms=60_000.0, adaptive=True)
+    try:
+        t0 = time.monotonic()
+        b.submit(parse_request({"user": 0, "k": 1})).wait(timeout=10)
+        assert time.monotonic() - t0 < 5.0  # did not wait out the deadline
+    finally:
+        b.stop()
+
+
+def test_batcher_error_fans_out_to_every_ticket():
+    def boom(key, requests):
+        raise RuntimeError("device fell over")
+
+    b = MicroBatcher(boom, deadline_ms=40.0, adaptive=False)
+    try:
+        tickets = [b.submit(parse_request({"user": u, "k": 2})) for u in (0, 1)]
+        for t in tickets:
+            with pytest.raises(RuntimeError, match="device fell over"):
+                t.wait(timeout=10)
+    finally:
+        b.stop()
+
+
+def test_batcher_stop_flushes_queue_and_rejects_new_submits():
+    release = threading.Event()
+
+    def slow_group(key, requests):
+        release.wait(5)
+        return [None] * len(requests)
+
+    b = MicroBatcher(slow_group, deadline_ms=0.0)
+    tickets = [b.submit(parse_request({"user": u, "k": 2})) for u in range(6)]
+    release.set()
+    b.stop()  # must flush everything still queued
+    for t in tickets:
+        assert t.wait(timeout=0) is None  # resolved, not dropped
+    with pytest.raises(RuntimeError):
+        b.submit(parse_request({"user": 0, "k": 2}))
+
+
+# ---------- coalesced vs isolated: bitwise ----------
+
+
+def test_coalesced_responses_bitwise_equal_isolated(artifact):
+    reference = PosteriorPredictor.load(artifact)
+    rng = np.random.default_rng(0)
+    payloads = []
+    for size in (1, 2, 3, 5, 8, 1, 4, 2):
+        payloads.append({
+            "rows": rng.integers(0, USERS, size).tolist(),
+            "cols": rng.integers(0, MOVIES, size).tolist(),
+        })
+    for _ in range(4):
+        payloads.append({"user": int(rng.integers(0, USERS)), "k": 5})
+    payloads.append({"users": rng.integers(0, USERS, 3).tolist(), "k": 5})
+    expected = [run_request(reference, parse_request(p)) for p in payloads]
+
+    # adaptive off: every request waits the full deadline, so a barrier of
+    # concurrent submitters is guaranteed to coalesce
+    with BPMFServer(artifact, deadline_ms=300.0, adaptive=False, watch=False) as srv:
+        barrier = threading.Barrier(len(payloads))
+        results: list = [None] * len(payloads)
+
+        def client(i):
+            barrier.wait()
+            results[i] = srv.handle_request(payloads[i], timeout=30)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(payloads))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.batcher.stats()
+
+    assert stats["coalesced_requests"] > 0, "nothing actually coalesced"
+    for (status, got), want in zip(results, expected):
+        assert status == 200
+        assert got == want  # dict equality on floats == bitwise f32 parity
+
+
+# ---------- item-sharded top-k ----------
+
+
+@pytest.mark.parametrize("k", [1, 5, MOVIES])
+def test_sharded_topk_matches_replicated(artifact, k):
+    p = PosteriorPredictor.load(artifact)
+    users = np.arange(USERS, dtype=np.int32)
+    ids_r, scores_r = p.top_k(users, k, sharded=False)
+    ids_s, scores_s = p.top_k(users, k, sharded=True)
+    np.testing.assert_array_equal(ids_s, ids_r)
+    np.testing.assert_array_equal(
+        scores_s.view(np.uint32), scores_r.view(np.uint32)  # bitwise
+    )
+
+
+def test_topk_mode_validation(artifact):
+    with pytest.raises(ValueError, match="topk_mode"):
+        PosteriorPredictor.load(artifact, topk_mode="blocked")
+
+
+def test_predictor_handle_swap_bumps_generation(artifact):
+    p1 = PosteriorPredictor.load(artifact)
+    p2 = PosteriorPredictor.load(artifact)
+    h = PredictorHandle(p1)
+    assert h.get() is p1 and h.generation == 0
+    assert h.swap(p2) == 1
+    got, gen = h.get_with_generation()
+    assert got is p2 and gen == 1
+
+
+# ---------- hot-swap ----------
+
+
+def test_hot_swap_is_batch_atomic_under_concurrent_clients(artifact, tmp_path):
+    old = PosteriorPredictor.load(artifact)
+    new_arrays = _arrays(seed=2)
+    staged = save_artifact(str(tmp_path / "staged"), _meta(seed=1), new_arrays)
+    new = PosteriorPredictor.load(staged)
+
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, USERS, 8).tolist()
+    cols = rng.integers(0, MOVIES, 8).tolist()
+    payload = {"rows": rows, "cols": cols}
+    p_old = run_request(old, parse_request(payload))["predictions"]
+    p_new = run_request(new, parse_request(payload))["predictions"]
+    assert p_old != p_new  # the swap must be observable
+
+    with BPMFServer(artifact, deadline_ms=1.0, watch=False) as srv:
+        stop = threading.Event()
+        bad: list = []
+        seen = {"old": 0, "new": 0}
+
+        def hammer():
+            while not stop.is_set():
+                status, resp = srv.handle_request(payload, timeout=30)
+                preds = resp.get("predictions")
+                if status != 200:
+                    bad.append((status, resp))
+                elif preds == p_old:
+                    seen["old"] += 1
+                elif preds == p_new:
+                    seen["new"] += 1
+                else:
+                    bad.append(("torn", preds))  # mixed old/new batch
+
+        threads = [threading.Thread(target=hammer) for _ in range(6)]
+        for t in threads:
+            t.start()
+        time.sleep(0.3)
+        # re-export over the live artifact dir, then force a watcher poll
+        save_artifact(artifact, _meta(seed=1), new_arrays)
+        assert srv.poll_artifact_now() is True
+        time.sleep(0.3)
+        stop.set()
+        for t in threads:
+            t.join()
+
+        assert not bad, bad[:3]
+        assert seen["old"] > 0 and seen["new"] > 0, seen
+        assert srv.generation == 1
+        # every request after the swap serves the new posterior
+        status, resp = srv.handle_request(payload, timeout=30)
+        assert status == 200 and resp["predictions"] == p_new
+
+
+def test_watcher_rejects_torn_export_and_keeps_serving(artifact):
+    payload = {"rows": [0, 1], "cols": [2, 3]}
+    with BPMFServer(artifact, watch=False) as srv:
+        _, want = srv.handle_request(payload, timeout=30)
+        # corrupt the metadata in place: signature changes, load must fail
+        meta_path = f"{artifact}/artifact.json"
+        good = open(meta_path).read()
+        with open(meta_path, "w") as f:
+            f.write('{"truncated": ')
+        assert srv.poll_artifact_now() is False
+        assert srv._swap_failures == 1 and srv.generation == 0
+        status, got = srv.handle_request(payload, timeout=30)
+        assert status == 200 and got == want  # old posterior still serving
+        # a later good export (here: restore + fresh arrays) swaps cleanly
+        with open(meta_path, "w") as f:
+            f.write(good)
+        save_artifact(artifact, _meta(seed=1), _arrays(seed=4))
+        assert srv.poll_artifact_now() is True
+        assert srv.generation == 1
+
+
+# ---------- HTTP round-trip ----------
+
+
+def test_http_roundtrip_bitwise_and_health(artifact):
+    reference = PosteriorPredictor.load(artifact)
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, USERS, 7)
+    cols = rng.integers(0, MOVIES, 7)
+    with BPMFServer(artifact, watch=False) as srv:
+        host, port = srv.address
+        c = ServeClient(f"{host}:{port}")
+
+        preds = c.predict(rows, cols)
+        np.testing.assert_array_equal(preds, reference.predict(rows, cols))
+
+        ids, scores = c.top_k(3, k=5)
+        want_ids, want_scores = reference.top_k(np.asarray([3], np.int32), 5)
+        np.testing.assert_array_equal(ids, want_ids[0])
+        np.testing.assert_array_equal(scores, want_scores[0])
+
+        h = c.health()
+        assert h["status"] == "ok" and h["generation"] == 0
+        assert h["artifact"]["num_movies"] == MOVIES
+        s = c.stats()
+        assert s["batcher"]["requests"] >= 2 and s["swap_failures"] == 0
+
+        with pytest.raises(ServeRequestError):
+            c.predict([USERS + 5], [0])  # out-of-range id -> 400 error body
+        resp = c.request({"nonsense": 1})
+        assert "error" in resp
+        c.close()
+
+
+def test_parse_address_forms():
+    assert parse_address("127.0.0.1:8642") == ("127.0.0.1", 8642)
+    assert parse_address("http://localhost:80/") == ("localhost", 80)
+    assert parse_address(":8642") == ("127.0.0.1", 8642)
+    for bad in ("nope", "host:", "host:http", ""):
+        with pytest.raises(ValueError):
+            parse_address(bad)
+
+
+def test_serve_cli_server_mode(artifact, capsys):
+    from repro.launch import serve as serve_cli
+
+    reference = PosteriorPredictor.load(artifact)
+    with BPMFServer(artifact, watch=False) as srv:
+        host, port = srv.address
+        rc = serve_cli.main(
+            ["--server", f"{host}:{port}", "--user", "3", "--top-k", "4"]
+        )
+        assert rc == 0
+        out = json.loads(capsys.readouterr().out)
+        want_ids, want_scores = reference.top_k(np.asarray([3], np.int32), 4)
+        assert out["items"] == want_ids[0].tolist()
+        assert out["scores"] == want_scores[0].tolist()
+
+    # with the server gone the CLI reports the connection failure
+    rc = serve_cli.main(["--server", f"{host}:{port}", "--user", "3"])
+    assert rc == 1
+    assert "cannot reach server" in capsys.readouterr().err
+
+
+def test_serve_cli_requires_exactly_one_source(capsys):
+    from repro.launch import serve as serve_cli
+
+    assert serve_cli.main(["--user", "0"]) == 2
+    assert serve_cli.main(
+        ["--artifact", "/tmp/x", "--server", "h:1", "--user", "0"]
+    ) == 2
