@@ -1,0 +1,225 @@
+"""RMSE vs inter-device communication: ring family vs posterior_merge.
+
+The trade the limited-communication papers (arXiv:1703.00734 / 2004.02561)
+make explicit, measured on this repo's backends over the statistical
+harness's synthetic reference task:
+
+* ``rmse`` — the engine's running posterior-mean RMSE (per-chain and
+  un-merged for ``posterior_merge``);
+* ``rmse_artifact`` — RMSE of the *exported* predictor over the global
+  held-out split: for ``posterior_merge`` this is the merged subset
+  posterior, the number that answers "what did partitioning cost";
+* ``bytes_per_sweep`` — modelled inter-device traffic per Gibbs sweep.
+  Ring/allgather rotate the opposite-side factor shard ``S-1`` times per
+  half-sweep across ``S`` devices: ``S * (S-1) * (cap_u + cap_v) * K * 4``
+  bytes. Sequential and posterior_merge move nothing between devices
+  during sampling — the merge backend's chains are fully independent;
+* ``collective_ops`` — *measured*: occurrences of collective-op mnemonics
+  (collective-permute / all-gather / all-reduce / reduce-scatter /
+  all-to-all) in the optimized HLO of each backend's compiled sweep-block
+  program. The acceptance claim "~0 bytes per sweep" is checked here
+  structurally: every posterior_merge chain program must contain **zero**
+  collectives, while the ring programs must contain at least one.
+
+Emits ``experiments/bench/fig_merge_comm.json`` (schema in
+experiments/bench/README.md, validated by ``scripts/check_bench_schema.py
+fig_merge_comm``), with acceptance booleans (``beats_baseline``,
+``within_band``, ``zero_comm_ok``) enforced on the committed full-size
+run. Run inside a forced multi-device process, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src:. \
+        python -m benchmarks.fig_merge_comm --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, smoke_out_path
+
+_COLLECTIVE_RE = re.compile(
+    r"(?i)(collective.?permute|all.?gather|all.?reduce|reduce.?scatter|all.?to.?all)"
+)
+
+
+def _collective_ops(compiled_text: str) -> int:
+    """Count collective-op mnemonics in optimized HLO text."""
+    return len(_COLLECTIVE_RE.findall(compiled_text))
+
+
+def _sweep_block_hlo_collectives(engine) -> int:
+    """Collectives in the backend's compiled one-sweep block program.
+
+    Lowers the same jitted function the engine's run loop dispatches, with
+    the backend's real data/state arguments, and counts collective ops in
+    the optimized HLO — per *chain program* for posterior_merge (summed;
+    each must independently compile to zero collectives for the merge
+    backend's claim to hold).
+    """
+    from repro.core import distributed as dist
+    from repro.core import gibbs, subset_merge
+
+    backend = engine.backend
+    key = jax.random.key(0)
+    state = backend.init_state(key)
+    pred = backend.init_pred()
+    accum = backend.init_accum()
+    if engine.cfg.backend.name == "posterior_merge":
+        total = 0
+        for c in range(backend.num_partitions):
+            lowered = gibbs.gibbs_sweep_block.lower(
+                subset_merge.chain_key(key, c), state[c], pred[c],
+                accum.chains[c], backend.chain_data[c], backend.core_cfg, 1,
+            )
+            total += _collective_ops(lowered.compile().as_text())
+        return total
+    if engine.cfg.backend.name == "sequential":
+        lowered = gibbs.gibbs_sweep_block.lower(
+            key, state, pred, accum, backend.data, backend.core_cfg, 1
+        )
+        return _collective_ops(lowered.compile().as_text())
+    lowered = dist.dist_gibbs_sweep_block.lower(
+        key, state, pred, accum, backend.data, backend.core_cfg, backend.mesh, 1
+    )
+    return _collective_ops(lowered.compile().as_text())
+
+
+def _bytes_per_sweep(engine) -> int:
+    """Modelled inter-device bytes per sweep (see module docstring)."""
+    name = engine.cfg.backend.name
+    if name in ("ring", "ring_async", "allgather"):
+        backend = engine.backend
+        S = backend.num_shards
+        cap_u = backend.plan.part_users.cap
+        cap_v = backend.plan.part_movies.cap
+        K = engine.cfg.model.K
+        return S * (S - 1) * (cap_u + cap_v) * K * 4
+    return 0  # sequential: one device; posterior_merge: independent chains
+
+
+def _artifact_rmse(engine, coo) -> float:
+    """Exported-predictor RMSE over the engine's own global held-out split."""
+    from repro.data.sparse import train_test_split
+
+    _, test = train_test_split(
+        coo, engine.cfg.run.test_fraction, engine.cfg.run.seed
+    )
+    preds = engine.predict(test.rows, test.cols)
+    return float(np.sqrt(np.mean((preds - test.vals) ** 2)))
+
+
+def _fit_timed(cfg, coo):
+    """(engine, seconds) for one fit, compile excluded via a warmup fit."""
+    from repro.bpmf import BPMFEngine
+
+    BPMFEngine(cfg).fit(coo)  # compile
+    engine = BPMFEngine(cfg)
+    engine.prepare(coo)
+    t0 = time.time()
+    engine.fit()
+    return engine, time.time() - t0
+
+
+def run(smoke: bool = False, out_path: str | None = None) -> dict:
+    from repro.bpmf import BPMFConfig, load_dataset
+    from repro.core import subset_merge
+
+    if smoke:
+        users, movies, nnz, K = 80, 40, 800, 4
+        sweeps, burn_in, keep = 4, 1, 2
+        pads = (8, 32)
+        partitions = (2,)
+    else:
+        # the statistical harness's reference task (tests/test_posterior_quality.py)
+        users, movies, nnz, K = 150, 80, 4000, 8
+        sweeps, burn_in, keep = 10, 3, 4
+        pads = (8, 32, 128)
+        partitions = (2, 4)
+    coo = load_dataset(
+        "synthetic", num_users=users, num_movies=movies, nnz=nnz,
+        noise_std=0.3, seed=7,
+    )
+    base = BPMFConfig().replace(
+        K=K, num_sweeps=sweeps, burn_in=burn_in,
+        keep_factor_samples=keep, bucket_pads=pads,
+    )
+
+    configs = [("sequential", base.replace(name="sequential")),
+               ("ring", base.replace(name="ring")),
+               ("ring_async", base.replace(name="ring_async", pipeline_depth=2))]
+    for P in partitions:
+        configs.append(
+            (f"posterior_merge_p{P}",
+             base.replace(name="posterior_merge", num_partitions=P))
+        )
+
+    baseline = subset_merge.column_mean_rmse(
+        coo, base.run.test_fraction, base.run.seed
+    )
+    out: dict = {
+        "devices": len(jax.devices()),
+        "smoke": smoke,
+        "workload": {"users": users, "movies": movies, "nnz": nnz, "K": K,
+                     "sweeps": sweeps, "burn_in": burn_in,
+                     "keep_factor_samples": keep},
+        "baseline_rmse": baseline,
+        "merge_band": list(subset_merge.MERGE_RMSE_BAND[max(partitions)]),
+        "backends": {},
+    }
+
+    for name, cfg in configs:
+        engine, seconds = _fit_timed(cfg, coo)
+        entry = {
+            "rmse": engine.rmse,
+            "rmse_artifact": _artifact_rmse(engine, coo),
+            "bytes_per_sweep": _bytes_per_sweep(engine),
+            "collective_ops": _sweep_block_hlo_collectives(engine),
+            "seconds": seconds,
+        }
+        out["backends"][name] = entry
+        print(f"[fig_merge_comm] {name}: rmse={entry['rmse']:.4f} "
+              f"artifact={entry['rmse_artifact']:.4f} "
+              f"{entry['bytes_per_sweep']} B/sweep "
+              f"{entry['collective_ops']} collectives ({seconds:.2f}s)")
+
+    # acceptance (ISSUE 7): the largest partition count must beat the
+    # column-mean baseline, land inside the recorded band, and its compiled
+    # chain programs must contain zero collectives (vs the ring's > 0)
+    merged = out["backends"][f"posterior_merge_p{max(partitions)}"]
+    lo, hi = out["merge_band"]
+    out["beats_baseline"] = bool(merged["rmse_artifact"] < baseline)
+    out["within_band"] = bool(lo <= merged["rmse_artifact"] <= hi)
+    out["zero_comm_ok"] = bool(
+        all(e["collective_ops"] == 0 and e["bytes_per_sweep"] == 0
+            for n, e in out["backends"].items()
+            if n.startswith("posterior_merge") or n == "sequential")
+        and all(e["collective_ops"] > 0 and e["bytes_per_sweep"] > 0
+                for n, e in out["backends"].items()
+                if n in ("ring", "ring_async", "allgather"))
+    )
+    print(f"[fig_merge_comm] baseline={baseline:.4f} "
+          f"beats_baseline={out['beats_baseline']} "
+          f"within_band={out['within_band']} zero_comm_ok={out['zero_comm_ok']}")
+
+    path = save_result(
+        "fig_merge_comm", out,
+        out=smoke_out_path("fig_merge_comm", smoke, out_path),
+    )
+    print(f"[fig_merge_comm] wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload; writes to a temp path unless --out")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: the committed "
+                         "experiments/bench file; smoke runs default to a "
+                         "temp path instead)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

@@ -29,7 +29,7 @@ IMPLS = ("pallas_fused", "pallas", "xla")
 
 # benchmarks whose payloads always carry a "smoke" flag: their committed
 # JSON must define it (and, like every committed file, have it false)
-SMOKE_STAMPED = ("serve_latency", "serve_load", "sweep_throughput")
+SMOKE_STAMPED = ("serve_latency", "serve_load", "sweep_throughput", "fig_merge_comm")
 
 
 def check_fig2_item_update(payload: dict) -> list[str]:
@@ -172,6 +172,53 @@ def check_sweep_throughput(payload: dict) -> list[str]:
     return errs
 
 
+def check_fig_merge_comm(payload: dict) -> list[str]:
+    """Schema of fig_merge_comm.json (RMSE vs communication trade-off)."""
+    errs: list[str] = []
+    if not isinstance(payload.get("devices"), int) or payload.get("devices", 0) < 1:
+        errs.append("devices: missing or < 1")
+    if not isinstance(payload.get("baseline_rmse"), (int, float)):
+        errs.append("baseline_rmse: missing or non-numeric")
+    band = payload.get("merge_band")
+    if (
+        not isinstance(band, list) or len(band) != 2
+        or not all(isinstance(b, (int, float)) for b in band)
+        or band[0] >= band[1]
+    ):
+        errs.append("merge_band: needs [lo, hi] with lo < hi")
+    smoke = bool(payload.get("smoke", False))
+    for k in ("beats_baseline", "within_band", "zero_comm_ok"):
+        if not isinstance(payload.get(k), bool):
+            errs.append(f"{k}: missing or non-bool")
+        elif not payload[k] and not smoke:
+            errs.append(f"{k}: False — merge quality/communication bar missed")
+    backends = payload.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        errs.append("backends: missing or empty")
+        return errs
+    merge_names = [n for n in backends if n.startswith("posterior_merge_p")]
+    for required in ("sequential", "ring"):
+        if required not in backends:
+            errs.append(f"backends: missing {required!r} entry")
+    if not merge_names:
+        errs.append("backends: needs at least one posterior_merge_p<N> entry")
+    for name, e in backends.items():
+        where = f"backends[{name}]"
+        for k in ("rmse", "rmse_artifact", "seconds"):
+            if not isinstance(e.get(k), (int, float)) or e.get(k, 0) <= 0:
+                errs.append(f"{where}.{k}: missing or non-positive")
+        for k in ("bytes_per_sweep", "collective_ops"):
+            if not isinstance(e.get(k), int) or e.get(k, -1) < 0:
+                errs.append(f"{where}.{k}: missing or negative")
+        # the headline claim: independent chains never talk during sampling
+        if name.startswith("posterior_merge") and e.get("collective_ops", 1) != 0:
+            errs.append(f"{where}.collective_ops: {e.get('collective_ops')!r} "
+                        "(must be 0 — merge chains compiled a collective)")
+        if name in ("ring", "ring_async", "allgather") and e.get("bytes_per_sweep", 0) <= 0:
+            errs.append(f"{where}.bytes_per_sweep: ring-family entry must be positive")
+    return errs
+
+
 def check_serve_load(payload: dict) -> list[str]:
     """Schema of serve_load.json (closed-loop server load benchmark)."""
     errs: list[str] = []
@@ -220,6 +267,7 @@ def check_serve_load(payload: dict) -> list[str]:
 CHECKERS = {
     "fig2_item_update": check_fig2_item_update,
     "fig5_overlap": check_fig5_overlap,
+    "fig_merge_comm": check_fig_merge_comm,
     "serve_latency": check_serve_latency,
     "serve_load": check_serve_load,
     "sweep_throughput": check_sweep_throughput,

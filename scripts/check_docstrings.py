@@ -31,11 +31,12 @@ MODULES = (
     "repro.serve.sharded_topk",
     "repro.serve.server",
     "repro.serve.client",
+    "repro.core.subset_merge",
 )
 
 # symbols defined under these packages are held to the coverage bar;
 # re-exports from elsewhere (numpy, jax, repro.core) are not
-PREFIXES = ("repro.bpmf", "repro.serve")
+PREFIXES = ("repro.bpmf", "repro.serve", "repro.core.subset_merge")
 
 
 def _public_members(obj) -> list[tuple[str, object]]:

@@ -25,6 +25,10 @@
 #                                       #   burst -> hot-swap re-export ->
 #                                       #   clean shutdown; serve_load --smoke
 #                                       #   + JSON schema check
+#   scripts/test.sh --merge-smoke       # + 2-partition posterior_merge CLI
+#                                       #   run -> export -> serve one-shot;
+#                                       #   fig_merge_comm --smoke + JSON
+#                                       #   schema check
 #
 # Benchmark smoke runs write to temp --out paths (never the committed
 # experiments/bench JSONs); each stanza schema-checks its temp output via
@@ -46,6 +50,7 @@ AUTOTUNE_SMOKE=0
 SERVE_SMOKE=0
 BLOCK_SMOKE=0
 SERVER_SMOKE=0
+MERGE_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
@@ -58,6 +63,8 @@ for a in "$@"; do
     BLOCK_SMOKE=1
   elif [[ "$a" == "--server-smoke" ]]; then
     SERVER_SMOKE=1
+  elif [[ "$a" == "--merge-smoke" ]]; then
+    MERGE_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -231,6 +238,22 @@ PY
   python -m benchmarks.serve_latency --smoke --load --out "$SRV_TMP/serve_load.json"
   python scripts/check_bench_schema.py serve_load --path "$SRV_TMP/serve_load.json"
   rm -rf "$SRV_TMP"
+fi
+
+if [[ "$MERGE_SMOKE" == 1 ]]; then
+  echo "== merge smoke: 2-partition posterior_merge run -> export -> serve =="
+  MERGE_TMP="$(mktemp -d)"
+  MART="$MERGE_TMP/artifact"
+  python -m repro.launch.bpmf --backend posterior_merge --num-partitions 2 \
+    --dataset synthetic --sweeps 6 --sweeps-per-block 3 --burn-in 2 --K 4 \
+    --users 80 --movies 40 --nnz 800 \
+    --export-artifact "$MART"
+  python -m repro.launch.serve --artifact "$MART" --rows 0,1,2 --cols 0,1,2 --std
+  echo "== fig_merge_comm smoke + schema check =="
+  python -m benchmarks.fig_merge_comm --smoke --out "$MERGE_TMP/fig_merge_comm.json"
+  python scripts/check_bench_schema.py fig_merge_comm --path "$MERGE_TMP/fig_merge_comm.json"
+  python scripts/check_bench_schema.py fig_merge_comm
+  rm -rf "$MERGE_TMP"
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

@@ -15,6 +15,9 @@ Registered backends:
   * ``"ring_async"`` — same, with ``BackendConfig.pipeline_depth`` ring
     rotations kept in flight (arXiv:1705.10633; DESIGN.md §7)
   * ``"allgather"``  — same, synchronous all-gather baseline
+  * ``"posterior_merge"`` — embarrassingly-parallel partition chains with a
+    subset-posterior merge at export (arXiv:1703.00734 / 2004.02561;
+    DESIGN.md §12) — zero inter-chain traffic during sampling
 """
 from __future__ import annotations
 
@@ -22,16 +25,24 @@ import abc
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.bpmf.config import BPMFConfig
 from repro.core import distributed as dist
 from repro.core import gibbs
+from repro.core import subset_merge
 from repro.core.gibbs import SweepMetrics
 from repro.core.prediction import PredictionState
-from repro.core.types import PosteriorAccum
-from repro.data.sparse import RatingsCOO, build_bpmf_data
+from repro.core.subset_merge import MergeAccum
+from repro.core.types import BPMFState, HyperParams, PosteriorAccum
+from repro.data.sparse import (
+    RatingsCOO,
+    build_bpmf_data,
+    build_bpmf_data_presplit,
+    train_test_split,
+)
 
 BACKENDS: dict[str, type["Backend"]] = {}
 
@@ -238,6 +249,12 @@ class Backend(abc.ABC):
     """
 
     name: str = "?"
+    #: Whether the backend draws the exact same posterior samples as
+    #: ``sequential`` for the same ``(seed, data)`` (the paper's §V-B
+    #: parity claim, enforced by the cross-backend parity tests).
+    #: Approximate-inference backends (``posterior_merge``) set it False
+    #: and are gated by the statistical harness instead.
+    exact_parity: bool = True
 
     def __init__(self, cfg: BPMFConfig):
         self.cfg = cfg
@@ -294,6 +311,43 @@ class Backend(abc.ABC):
     def accum_from_host(self, tree: dict) -> PosteriorAccum:
         """Rebuild the device accumulator from an :meth:`accum_host` tree
         (checkpoint restore path)."""
+
+    def posterior_template(self) -> dict:
+        """Empty-leaf restore target naming the ``"posterior"`` checkpoint
+        subtree's leaves (:meth:`accum_host`'s schema — the restore loads
+        whatever shapes the checkpoint holds, so only leaf *names* matter).
+        Backends with a different subtree shape (``posterior_merge``'s
+        per-chain dicts) override this."""
+        return {
+            "U_sum": np.zeros((0, 0), np.float32),
+            "V_sum": np.zeros((0, 0), np.float32),
+            "count": np.zeros((), np.int32),
+            "U_samples": np.zeros((0, 0, 0), np.float32),
+            "V_samples": np.zeros((0, 0, 0), np.float32),
+        }
+
+    def posterior_export(self, accum) -> dict:
+        """Global posterior summary feeding the serving artifact.
+
+        Returns ``{"count", "U_samples", "V_samples"}`` plus ``"U_mean"`` /
+        ``"V_mean"`` when ``count > 0`` — host float32 arrays in original
+        item order, chronological sample stacks. The default derives it from
+        the single :meth:`accum_host` tree (bitwise the arithmetic the
+        engine has always exported); ``posterior_merge`` overrides it with
+        the subset-posterior combination.
+        """
+        tree = self.accum_host(accum)
+        count = int(np.asarray(tree["count"]))
+        out: dict = {
+            "count": count,
+            "U_samples": np.asarray(tree["U_samples"], np.float32),
+            "V_samples": np.asarray(tree["V_samples"], np.float32),
+        }
+        if count:
+            n = np.float32(count)
+            out["U_mean"] = np.asarray(tree["U_sum"] / n, np.float32)
+            out["V_mean"] = np.asarray(tree["V_sum"] / n, np.float32)
+        return out
 
     # ------------------------------------------------------------------
     @property
@@ -507,6 +561,243 @@ class AsyncRingBackend(DistributedBackend):
 @register_backend("allgather")
 class AllGatherBackend(DistributedBackend):
     """Synchronous baseline: blocking all-gather then local updates."""
+
+
+# --------------------------------------------------------------------------
+# Posterior merge (limited-communication subset posteriors)
+# --------------------------------------------------------------------------
+
+
+@register_backend("posterior_merge")
+class PosteriorMergeBackend(Backend):
+    """Embarrassingly-parallel partition chains + subset-posterior merge.
+
+    The limited-communication regime of arXiv:1703.00734 / 2004.02561
+    (DESIGN.md §12): one global train/test split, users partitioned into
+    ``BackendConfig.num_partitions`` chains by the ring's nnz cost model,
+    and one fully independent Gibbs chain per partition — each running the
+    same device-resident blocked sweep loop the sequential backend uses,
+    placed round-robin across the visible devices. Chains exchange **zero
+    bytes per sweep** (no collectives at all — ``fig_merge_comm`` measures
+    this on the compiled HLO); the subset posteriors meet only at
+    export/serve time, combined per ``BackendConfig.merge_method``
+    (:func:`repro.core.subset_merge.merge_chain_trees`).
+
+    State / pred / accum are tuples of per-chain pytrees (checkpointed as
+    ``chain_000``-keyed subtrees), chain c draws from the disjoint RNG
+    stream ``fold_in(run_key, c)``, and user-factor rows are initialized by
+    *original* user id, so the per-chain init matches the sequential
+    backend's rows for the same seed.
+    """
+
+    # approximate inference: merged posterior != sequential samples; gated
+    # by the statistical harness (tests/test_posterior_quality.py)
+    exact_parity = False
+
+    def prepare(self, coo: RatingsCOO) -> None:
+        bk = self.cfg.backend
+        P = bk.num_partitions or min(len(jax.devices()), coo.num_users)
+        self.user_sets = subset_merge.partition_users(
+            coo, P, strategy=bk.partition_strategy
+        )
+        # one GLOBAL split + centering, identical to the sequential
+        # backend's, so cross-backend RMSE compares inference not data
+        train, test = train_test_split(
+            coo, self.cfg.run.test_fraction, self.cfg.run.seed
+        )
+        self._mean = float(train.vals.mean()) if train.nnz else 0.0
+        self._range = (float(coo.vals.min()), float(coo.vals.max()))
+        train_subs = subset_merge.split_by_users(train, self.user_sets)
+        test_subs = subset_merge.split_by_users(test, self.user_sets)
+        devices = jax.devices()
+        self.devices = [devices[c % len(devices)] for c in range(P)]
+        self.chain_data = []
+        for c in range(P):
+            data = build_bpmf_data_presplit(
+                subset_merge.localize_users(train_subs[c], self.user_sets[c]),
+                subset_merge.localize_users(test_subs[c], self.user_sets[c]),
+                pads=bk.bucket_pads,
+                mean_rating=self._mean,
+                min_rating=self._range[0],
+                max_rating=self._range[1],
+            )
+            self.chain_data.append(jax.device_put(data, self.devices[c]))
+        self.num_partitions = P
+        self._num_users = coo.num_users
+        self._num_movies = coo.num_movies
+        self._prepared = True
+
+    @staticmethod
+    def _chain_name(c: int) -> str:
+        """Checkpoint subtree key of chain ``c`` (zero-padded, stable order)."""
+        return f"chain_{c:03d}"
+
+    def init_state(self, key: jax.Array):
+        """Per-chain prior-predictive states; U rows keyed by *original*
+        user id (bitwise the sequential init's rows), V identical across
+        chains."""
+        dt = self.core_cfg.sample_dtype
+        K = self.core_cfg.K
+        ku, kv = jax.random.split(key)
+        states = []
+        for c, (data, uids) in enumerate(zip(self.chain_data, self.user_sets)):
+            st = BPMFState(
+                U=gibbs.init_rows(ku, jnp.asarray(uids, jnp.int32), K, dt),
+                V=gibbs.init_rows(
+                    kv, jnp.arange(data.num_movies, dtype=jnp.int32), K, dt
+                ),
+                hyper_U=HyperParams.init(K, dt),
+                hyper_V=HyperParams.init(K, dt),
+                sweep=jnp.zeros((), jnp.int32),
+            )
+            states.append(jax.device_put(st, self.devices[c]))
+        return tuple(states)
+
+    def _combine_metric_rows(self, per_chain: np.ndarray) -> np.ndarray:
+        """``[C, B, 3]`` per-chain metric rows -> ``[B, 3]`` global rows.
+
+        Each chain's RMSE covers its own (disjoint) test subset, so the
+        pooled global RMSE is the nnz-weighted quadratic mean
+        ``sqrt(sum_c T_c * rmse_c^2 / T)``; chains with an empty test
+        subset report NaN and are zero-weighted. The sweep column is shared
+        (chains run in lock-step).
+        """
+        T = np.asarray(
+            [int(d.test.rows.shape[0]) for d in self.chain_data], np.float64
+        )
+        total = max(T.sum(), 1.0)
+        sq = np.square(np.nan_to_num(per_chain[:, :, :2].astype(np.float64)))
+        comb = np.sqrt((T[:, None, None] * sq).sum(axis=0) / total)
+        rows = np.concatenate([comb, per_chain[0, :, 2:3].astype(np.float64)], axis=1)
+        return rows.astype(np.float32)
+
+    def sweep(self, key: jax.Array, state, pred):
+        outs = [
+            gibbs.gibbs_sweep(
+                subset_merge.chain_key(key, c), state[c], pred[c],
+                self.chain_data[c], self.core_cfg,
+            )
+            for c in range(self.num_partitions)
+        ]
+        per_chain = np.stack(
+            [
+                np.asarray(
+                    jax.device_get(
+                        jnp.stack(
+                            [m.rmse_sample, m.rmse_avg, m.sweep.astype(jnp.float32)]
+                        )
+                    )
+                )
+                for _, _, m in outs
+            ]
+        )[:, None, :]
+        row = self._combine_metric_rows(per_chain)[0]
+        metrics = SweepMetrics(float(row[0]), float(row[1]), float(row[2]))
+        return tuple(o[0] for o in outs), tuple(o[1] for o in outs), metrics
+
+    def sweep_block(
+        self, key: jax.Array, state, pred, accum: MergeAccum, block_size: int
+    ):
+        outs = []
+        for c in range(self.num_partitions):
+            outs.append(
+                gibbs.gibbs_sweep_block(
+                    subset_merge.chain_key(key, c), state[c], pred[c],
+                    accum.chains[c], self.chain_data[c], self.core_cfg, block_size,
+                )
+            )
+        # all chain blocks are dispatched (async) before the first fetch
+        per_chain = np.stack([np.asarray(jax.device_get(o[3])) for o in outs])
+        metrics = self._combine_metric_rows(per_chain)
+        return (
+            tuple(o[0] for o in outs),
+            tuple(o[1] for o in outs),
+            MergeAccum(chains=tuple(o[2] for o in outs)),
+            metrics,
+        )
+
+    def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
+        """(U, V) of the current per-chain samples: U rows scatter from
+        their owning chain; V (sampled by every chain) is the uniform mean
+        of the chains' current draws."""
+        K = self.core_cfg.K
+        U = np.zeros((self._num_users, K), np.float32)
+        for st, uids in zip(state, self.user_sets):
+            U[uids] = np.asarray(st.U, np.float32)
+        V = np.mean(
+            np.stack([np.asarray(st.V, np.float32) for st in state]), axis=0
+        ).astype(np.float32)
+        return U, V
+
+    def init_accum(self) -> MergeAccum:
+        keep = self.cfg.run.keep_factor_samples
+        K = self.core_cfg.K
+        chains = []
+        for c, data in enumerate(self.chain_data):
+            a = PosteriorAccum.init(data.num_users, data.num_movies, K, keep)
+            chains.append(jax.device_put(a, self.devices[c]))
+        return MergeAccum(chains=tuple(chains))
+
+    def init_pred(self):
+        """Per-chain prediction accumulators, one per chain test subset."""
+        return tuple(
+            jax.device_put(PredictionState.init(int(d.test.rows.shape[0])), dev)
+            for d, dev in zip(self.chain_data, self.devices)
+        )
+
+    def accum_host(self, accum: MergeAccum) -> dict:
+        return {
+            self._chain_name(c): accum_host_tree(a)
+            for c, a in enumerate(accum.chains)
+        }
+
+    def accum_from_host(self, tree: dict) -> MergeAccum:
+        keep = self.cfg.run.keep_factor_samples
+        K = self.core_cfg.K
+        chains = []
+        for c, data in enumerate(self.chain_data):
+            template = PosteriorAccum.init(data.num_users, data.num_movies, K, keep)
+            host = accum_from_host_tree(tree[self._chain_name(c)], template)
+            chains.append(jax.device_put(host, self.devices[c]))
+        return MergeAccum(chains=tuple(chains))
+
+    def posterior_template(self) -> dict:
+        return {
+            self._chain_name(c): super(PosteriorMergeBackend, self).posterior_template()
+            for c in range(self.num_partitions)
+        }
+
+    def posterior_export(self, accum: MergeAccum) -> dict:
+        """The backend's single communication event: gather each chain's
+        accumulator and merge the subset posteriors
+        (:func:`repro.core.subset_merge.merge_chain_trees`)."""
+        trees = [accum_host_tree(a) for a in accum.chains]
+        return subset_merge.merge_chain_trees(
+            trees,
+            self.user_sets,
+            self._num_users,
+            method=self.cfg.backend.merge_method,
+        )
+
+    @property
+    def num_test(self) -> int:
+        return sum(int(d.test.rows.shape[0]) for d in self.chain_data)
+
+    @property
+    def test_vals(self) -> jax.Array:
+        return jnp.asarray(
+            np.concatenate(
+                [np.asarray(d.test.vals, np.float32) for d in self.chain_data]
+            )
+        )
+
+    @property
+    def mean_rating(self) -> float:
+        return self._mean
+
+    @property
+    def rating_range(self) -> tuple[float, float]:
+        return self._range
 
 
 # --------------------------------------------------------------------------

@@ -124,8 +124,10 @@ class BackendConfig:
     ``name`` picks an entry from the backend registry
     (:mod:`repro.bpmf.backends`): ``"sequential"`` (single-program oracle),
     ``"ring"`` (paper §IV-C overlap schedule), ``"ring_async"`` (depth-d
-    pipelined ring, arXiv:1705.10633 / DESIGN.md §7) or ``"allgather"``
-    (synchronous baseline).
+    pipelined ring, arXiv:1705.10633 / DESIGN.md §7), ``"allgather"``
+    (synchronous baseline) or ``"posterior_merge"`` (embarrassingly-parallel
+    partition chains + subset-posterior merge, arXiv:1703.00734 /
+    DESIGN.md §12).
 
     Attributes:
         name: Backend registry key; see
@@ -152,7 +154,16 @@ class BackendConfig:
             pad >= their rating count.
         partition_strategy: Cost-model load balancing of items onto
             shards (paper §IV-B): ``"lpt"`` (longest-processing-time) or
-            ``"block"`` (contiguous).
+            ``"block"`` (contiguous). ``posterior_merge`` reuses it to
+            balance users across chains.
+        num_partitions: ``posterior_merge`` only — number of independent
+            partition chains; 0 means one chain per visible device.
+            Ignored by every other backend.
+        merge_method: ``posterior_merge`` only — subset-posterior
+            combination: ``"precision"`` (precision-weighted Gaussian
+            product estimated from the chains' sample windows,
+            arXiv:1703.00734; falls back to pooling when fewer than two
+            window samples exist) or ``"pool"`` (uniform-weight pooling).
     """
 
     name: str = "sequential"
@@ -162,11 +173,22 @@ class BackendConfig:
     use_pallas: bool | None = None  # deprecated: use gram_impl
     bucket_pads: tuple[int, ...] = (8, 32, 128, 512, 2048)
     partition_strategy: str = "lpt"  # cost-model balancing (paper §IV-B)
+    num_partitions: int = 0  # posterior_merge: chains (0 = one per device)
+    merge_method: str = "precision"  # posterior_merge: precision | pool
 
     def __post_init__(self) -> None:
         if self.pipeline_depth < 1:
             raise ValueError(
                 f"BackendConfig.pipeline_depth must be >= 1, got {self.pipeline_depth}"
+            )
+        if self.num_partitions < 0:
+            raise ValueError(
+                f"BackendConfig.num_partitions must be >= 0, got {self.num_partitions}"
+            )
+        if self.merge_method not in ("precision", "pool"):
+            raise ValueError(
+                f'BackendConfig.merge_method must be "precision" or "pool", '
+                f"got {self.merge_method!r}"
             )
         if self.use_pallas is not None:
             if self.gram_impl != "auto":

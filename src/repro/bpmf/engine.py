@@ -300,21 +300,23 @@ class BPMFEngine:
 
         Posterior-mean factors when post-burn-in samples have been
         accumulated, else the current raw sample (``num_mean_samples=0``).
-        One host gather of the device accumulator feeds the whole payload.
+        The backend's ``posterior_export`` hook supplies the global summary
+        (one host gather per device accumulator; the ``posterior_merge``
+        backend additionally runs its subset-posterior merge here — its
+        only communication event).
         """
         self._ensure_state()
-        tree = self._posterior.tree()  # single device -> host gather
-        count = int(tree["count"])
+        summary = self.backend.posterior_export(self._accum)
+        count = int(summary["count"])
         if count:
-            n = np.float32(count)
-            U_mean = np.asarray(tree["U_sum"] / n, np.float32)
-            V_mean = np.asarray(tree["V_sum"] / n, np.float32)
+            U_mean = np.asarray(summary["U_mean"], np.float32)
+            V_mean = np.asarray(summary["V_mean"], np.float32)
         else:
             U, V = self.factors()
             U_mean = np.asarray(U, np.float32)
             V_mean = np.asarray(V, np.float32)
-        Us = np.asarray(tree["U_samples"], np.float32)
-        Vs = np.asarray(tree["V_samples"], np.float32)
+        Us = np.asarray(summary["U_samples"], np.float32)
+        Vs = np.asarray(summary["V_samples"], np.float32)
         S = Us.shape[0]
         if S == 0:  # canonical empty shapes for the artifact schema
             Us = np.zeros((0,) + U_mean.shape, np.float32)
@@ -416,14 +418,9 @@ class BPMFEngine:
             raise FileNotFoundError(f"no checkpoint under {self.cfg.run.checkpoint_dir}")
         # posterior template: leaf names only (restore loads whatever shapes
         # the checkpoint holds) — cheaper than gathering the zeroed device
-        # accumulator just to name its leaves
-        posterior_target = {
-            "U_sum": np.zeros((0, 0), np.float32),
-            "V_sum": np.zeros((0, 0), np.float32),
-            "count": np.zeros((), np.int32),
-            "U_samples": np.zeros((0, 0, 0), np.float32),
-            "V_samples": np.zeros((0, 0, 0), np.float32),
-        }
+        # accumulator just to name its leaves. The backend owns the subtree
+        # shape (posterior_merge checkpoints per-chain subtrees).
+        posterior_target = self.backend.posterior_template()
         target = {
             "state": self._state,
             "pred": self._pred,

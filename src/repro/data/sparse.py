@@ -152,14 +152,43 @@ def build_bpmf_data(
 ) -> BPMFData:
     """Full host-side pipeline: split, center, bucket both sides."""
     train, test = train_test_split(coo, test_fraction, seed)
-    mean = float(train.vals.mean()) if train.nnz else 0.0
-    centered = train.vals - mean
-
-    u_indptr, u_idx, u_val = csr_from_coo(train.rows, train.cols, centered, coo.num_users)
-    m_indptr, m_idx, m_val = csr_from_coo(train.cols, train.rows, centered, coo.num_movies)
-
     lo = float(coo.vals.min()) if min_rating is None else min_rating
     hi = float(coo.vals.max()) if max_rating is None else max_rating
+    return build_bpmf_data_presplit(train, test, pads, min_rating=lo, max_rating=hi)
+
+
+def build_bpmf_data_presplit(
+    train: RatingsCOO,
+    test: RatingsCOO,
+    pads: Sequence[int] = (8, 32, 128, 512, 2048),
+    mean_rating: float | None = None,
+    min_rating: float | None = None,
+    max_rating: float | None = None,
+) -> BPMFData:
+    """Center and bucket an already-split (train, test) pair.
+
+    The split-free tail of :func:`build_bpmf_data`, exposed so callers that
+    partition the ratings *after* a global split — the ``posterior_merge``
+    backend gives each chain a user-subset of one shared split — can build
+    per-subset :class:`BPMFData` with globally consistent centering and
+    clipping (pass the global ``mean_rating`` / ``min_rating`` /
+    ``max_rating`` explicitly; defaults derive them from the pair given).
+    """
+    mean = (
+        (float(train.vals.mean()) if train.nnz else 0.0)
+        if mean_rating is None
+        else float(mean_rating)
+    )
+    centered = train.vals - mean
+
+    u_indptr, u_idx, u_val = csr_from_coo(train.rows, train.cols, centered, train.num_users)
+    m_indptr, m_idx, m_val = csr_from_coo(train.cols, train.rows, centered, train.num_movies)
+
+    all_vals = np.concatenate([train.vals, test.vals]) if train.nnz or test.nnz else None
+    lo = (float(all_vals.min()) if all_vals is not None else -np.inf) \
+        if min_rating is None else min_rating
+    hi = (float(all_vals.max()) if all_vals is not None else np.inf) \
+        if max_rating is None else max_rating
     return BPMFData(
         users=bucketize_side(u_indptr, u_idx, u_val, pads),
         movies=bucketize_side(m_indptr, m_idx, m_val, pads),
@@ -169,8 +198,8 @@ def build_bpmf_data(
             vals=jnp.asarray(test.vals, jnp.float32),
         ),
         mean_rating=jnp.asarray(mean, jnp.float32),
-        num_users=coo.num_users,
-        num_movies=coo.num_movies,
+        num_users=train.num_users,
+        num_movies=train.num_movies,
         min_rating=lo,
         max_rating=hi,
     )

@@ -26,7 +26,8 @@ def build_parser() -> argparse.ArgumentParser:
         description="Run BPMF Gibbs sampling through the repro.bpmf engine facade.",
     )
     p.add_argument("--backend", default="sequential",
-                   help="sequential | ring | ring_async | allgather (registry name)")
+                   help="sequential | ring | ring_async | allgather | "
+                        "posterior_merge (registry name)")
     p.add_argument("--dataset", default="synthetic",
                    help="synthetic | movielens | chembl (registry name)")
     p.add_argument("--dataset-path", default=None, help="file for movielens/chembl loaders")
@@ -45,6 +46,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="distributed shard count (0 = all visible devices)")
     p.add_argument("--pipeline-depth", type=int, default=1,
                    help="ring_async: ring rotations kept in flight (d >= 1)")
+    p.add_argument("--num-partitions", type=int, default=0,
+                   help="posterior_merge: independent partition chains "
+                        "(0 = one per visible device)")
+    p.add_argument("--merge-method", default="precision",
+                   choices=["precision", "pool"],
+                   help="posterior_merge: subset-posterior combination "
+                        "(precision-weighted Gaussian product or uniform "
+                        "pooling)")
     p.add_argument("--devices", type=int, default=0,
                    help="force N host (CPU) devices before jax init")
     p.add_argument("--gram-impl", default="auto",
@@ -91,6 +100,8 @@ def main(argv: list[str] | None = None) -> int:
         name=args.backend,
         num_shards=args.num_shards,
         pipeline_depth=args.pipeline_depth,
+        num_partitions=args.num_partitions,
+        merge_method=args.merge_method,
         **gram_kw,
         K=args.K,
         alpha=args.alpha,

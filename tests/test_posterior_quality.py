@@ -1,19 +1,39 @@
 """Statistical regression harness for the posterior across all backends.
 
-Three invariants per backend (sequential / ring / allgather / ring_async),
-on one seeded synthetic problem, tier-1 fast and hypothesis-free:
+One seeded synthetic reference task (150 x 80, nnz=4000, noise_std=0.3,
+data seed 7 — also the workload of ``benchmarks/fig_merge_comm.py``),
+tier-1 fast and hypothesis-free. Per full-data backend (sequential / ring
+/ allgather / ring_async):
 
 1. the posterior-predictive RMSE beats the column-mean baseline — the
    sampler must extract low-rank structure, not just the per-movie bias;
 2. the RMSE sits inside a recorded tolerance band, so silent numerical
    regressions (a broken prior update, a dropped burn-in gate) fail loudly
-   rather than drifting;
+   rather than drifting — failures print the observed value next to the
+   recorded band;
 3. served predictions (export -> PosteriorPredictor) agree with
    ``engine.predict()`` on a held-out batch to fp tolerance — the
    acceptance bar for the serving round-trip.
 
+The limited-communication ``posterior_merge`` backend gets its own gates,
+on the *merged artifact* (its per-chain engine RMSE is not the claim):
+
+4. the merged artifact beats the column-mean baseline with real margin
+   and lands inside the recorded per-partition-count band
+   (:data:`repro.core.subset_merge.MERGE_RMSE_BAND`);
+5. partitioning degrades RMSE by at most the recorded bound vs the
+   full-data sequential chain's artifact
+   (:data:`repro.core.subset_merge.MERGE_DEGRADATION_MAX`);
+6. the merge is stable across sampler seeds (spread bound, every seed
+   inside the band);
+7. posterior-width sanity: the predictive std must roughly calibrate the
+   held-out residuals — rms of z = (y - mean) / sqrt(std^2 + 1/alpha)
+   inside a recorded band, for sequential and for the merged posterior.
+   Overconfident subset posteriors (a classic consensus-MC failure mode)
+   push rms(z) up and fail loudly.
+
 The runs execute in-process on whatever device count the main process has
-(scripts/test.sh forces 8); the recorded band carries the cross-backend /
+(scripts/test.sh forces 8); the recorded bands carry the cross-backend /
 cross-mesh reduction-order slack observed in the parity tests.
 """
 from __future__ import annotations
@@ -22,6 +42,7 @@ import numpy as np
 import pytest
 
 from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+from repro.core import subset_merge
 from repro.data.sparse import train_test_split
 
 BACKENDS = ("sequential", "ring", "allgather", "ring_async")
@@ -30,6 +51,22 @@ BACKENDS = ("sequential", "ring", "allgather", "ring_async")
 # the band is ~25x wider than the observed cross-backend spread (<=1e-3)
 RMSE_BAND = (0.70, 0.82)
 _RECORDED_RMSE = 0.7602  # for the failure message
+
+MERGE_PARTITIONS = (2, 4)
+# cross-seed artifact-RMSE spread bound for the merged posterior (recorded
+# spread 0.067 at P=2 over seeds 0..2; the bound leaves ~2x headroom)
+MERGE_SEED_SPREAD_MAX = 0.15
+
+# recorded rms(z) of held-out residuals standardized by the predictive
+# std (z = (y - mean) / sqrt(std^2 + 1/alpha)); 1.0 = perfectly
+# calibrated. Recorded on the reference task: sequential 0.97,
+# merged posterior 1.03 at P=2 (1.15 at P=4) — the merge is mildly
+# overconfident (fewer effective samples per item + precision-product
+# narrowing), and a real posterior collapse would blow far past the hi.
+CALIBRATION_RMS_Z_BAND = {
+    "sequential": (0.75, 1.25),
+    "posterior_merge": (0.80, 1.45),
+}
 
 
 def _cfg(**kw) -> BPMFConfig:
@@ -47,17 +84,35 @@ def _coo():
     )
 
 
-def _column_mean_baseline(coo, cfg) -> tuple[float, np.ndarray, np.ndarray]:
-    """(baseline RMSE, test rows, test cols) on the engine's own split."""
-    train, test = train_test_split(coo, cfg.run.test_fraction, cfg.run.seed)
-    gmean = float(train.vals.mean())
-    col_sum = np.zeros(coo.num_movies)
-    col_cnt = np.zeros(coo.num_movies)
-    np.add.at(col_sum, train.cols, train.vals.astype(np.float64))
-    np.add.at(col_cnt, train.cols, 1)
-    col_mean = np.where(col_cnt > 0, col_sum / np.maximum(col_cnt, 1), gmean)
-    rmse = float(np.sqrt(np.mean((col_mean[test.cols] - test.vals) ** 2)))
-    return rmse, test.rows, test.cols
+def _heldout(coo, cfg):
+    """The engine's own held-out split for this config."""
+    _, test = train_test_split(coo, cfg.run.test_fraction, cfg.run.seed)
+    return test
+
+
+def _artifact_rmse(engine, test) -> float:
+    """RMSE of the exported predictor (merged posterior for posterior_merge)
+    over the held-out points."""
+    preds = engine.predict(test.rows, test.cols)
+    return float(np.sqrt(np.mean((preds - test.vals) ** 2)))
+
+
+@pytest.fixture(scope="module")
+def sequential_reference():
+    """One full-data sequential fit shared by the merge gates:
+    (artifact RMSE, baseline RMSE) on the reference task."""
+    coo = _coo()
+    cfg = _cfg(name="sequential")
+    engine = BPMFEngine(cfg).fit(coo)
+    baseline = subset_merge.column_mean_rmse(
+        coo, cfg.run.test_fraction, cfg.run.seed
+    )
+    return _artifact_rmse(engine, _heldout(coo, cfg)), baseline
+
+
+# --------------------------------------------------------------------------
+# full-data backends
+# --------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("name", BACKENDS)
@@ -65,7 +120,10 @@ def test_posterior_quality_and_serving_agreement(tmp_path, name):
     coo = _coo()
     cfg = _cfg(name=name)
     engine = BPMFEngine(cfg).fit(coo)
-    baseline, rows, cols = _column_mean_baseline(coo, cfg)
+    baseline = subset_merge.column_mean_rmse(
+        coo, cfg.run.test_fraction, cfg.run.seed
+    )
+    test = _heldout(coo, cfg)
 
     # 1. beats the column-mean baseline with real margin
     assert engine.rmse < 0.95 * baseline, (
@@ -76,7 +134,7 @@ def test_posterior_quality_and_serving_agreement(tmp_path, name):
     # 2. inside the recorded tolerance band
     lo, hi = RMSE_BAND
     assert lo < engine.rmse < hi, (
-        f"{name}: RMSE {engine.rmse:.4f} left the recorded band "
+        f"{name}: observed RMSE {engine.rmse:.4f} left the recorded band "
         f"[{lo}, {hi}] (recorded {_RECORDED_RMSE})"
     )
 
@@ -84,8 +142,8 @@ def test_posterior_quality_and_serving_agreement(tmp_path, name):
     artifact = engine.export(str(tmp_path / name))
     from repro.serve import PosteriorPredictor
 
-    served = PosteriorPredictor.load(artifact).predict(rows, cols)
-    want = engine.predict(rows, cols)
+    served = PosteriorPredictor.load(artifact).predict(test.rows, test.cols)
+    want = engine.predict(test.rows, test.cols)
     np.testing.assert_allclose(served, want, atol=1e-6, rtol=0)
     # same jitted program + bit-identical round-tripped arrays: exact
     np.testing.assert_array_equal(served, want)
@@ -98,3 +156,100 @@ def test_backends_agree_on_final_rmse():
     rmses = {n: BPMFEngine(_cfg(name=n)).fit(coo).rmse for n in BACKENDS}
     spread = max(rmses.values()) - min(rmses.values())
     assert spread < 1e-3, rmses
+
+
+# --------------------------------------------------------------------------
+# posterior_merge: merged-artifact quality gates
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_partitions", MERGE_PARTITIONS)
+def test_posterior_merge_quality(tmp_path, num_partitions, sequential_reference):
+    """Gates 4 + 5 + the serving round-trip, per partition count."""
+    seq_artifact_rmse, baseline = sequential_reference
+    coo = _coo()
+    cfg = _cfg(name="posterior_merge", num_partitions=num_partitions)
+    engine = BPMFEngine(cfg).fit(coo)
+    test = _heldout(coo, cfg)
+    observed = _artifact_rmse(engine, test)
+
+    # 4a. the merged artifact beats the column-mean baseline with margin
+    assert observed < 0.95 * baseline, (
+        f"posterior_merge P={num_partitions}: merged-artifact RMSE "
+        f"{observed:.4f} does not beat 0.95 x column-mean baseline "
+        f"({baseline:.4f})"
+    )
+
+    # 4b. inside the recorded per-partition-count band
+    lo, hi = subset_merge.MERGE_RMSE_BAND[num_partitions]
+    assert lo < observed < hi, (
+        f"posterior_merge P={num_partitions}: observed merged-artifact RMSE "
+        f"{observed:.4f} left the recorded band [{lo}, {hi}]"
+    )
+
+    # 5. bounded degradation vs the full-data sequential chain
+    degradation = observed - seq_artifact_rmse
+    bound = subset_merge.MERGE_DEGRADATION_MAX[num_partitions]
+    assert degradation <= bound, (
+        f"posterior_merge P={num_partitions}: merged-artifact RMSE "
+        f"{observed:.4f} degrades {degradation:.4f} over the sequential "
+        f"artifact ({seq_artifact_rmse:.4f}); recorded bound {bound}"
+    )
+
+    # the existing export/serve surface consumes the merged artifact
+    # unchanged: served == in-process, exactly
+    artifact = engine.export(str(tmp_path / f"merge_p{num_partitions}"))
+    from repro.serve import PosteriorPredictor
+
+    served = PosteriorPredictor.load(artifact).predict(test.rows, test.cols)
+    np.testing.assert_array_equal(served, engine.predict(test.rows, test.cols))
+
+
+def test_posterior_merge_cross_seed_stability(sequential_reference):
+    """Gate 6: the merge must not be a lucky seed — artifact RMSE across
+    sampler seeds stays inside the band with bounded spread."""
+    _, baseline = sequential_reference
+    coo = _coo()
+    observed = []
+    for seed in (0, 1, 2):
+        cfg = _cfg(name="posterior_merge", num_partitions=2, seed=seed)
+        engine = BPMFEngine(cfg).fit(coo)
+        observed.append(_artifact_rmse(engine, _heldout(coo, cfg)))
+    lo, hi = subset_merge.MERGE_RMSE_BAND[2]
+    spread = max(observed) - min(observed)
+    assert spread < MERGE_SEED_SPREAD_MAX, (
+        f"posterior_merge P=2: cross-seed artifact RMSE spread {spread:.4f} "
+        f"exceeds {MERGE_SEED_SPREAD_MAX} (observed "
+        f"{[f'{r:.4f}' for r in observed]})"
+    )
+    for seed, r in enumerate(observed):
+        assert lo < r < hi and r < baseline, (
+            f"posterior_merge P=2 seed {seed}: observed artifact RMSE "
+            f"{r:.4f} left the recorded band [{lo}, {hi}] "
+            f"(baseline {baseline:.4f})"
+        )
+
+
+@pytest.mark.parametrize(
+    "name,num_partitions", [("sequential", 0), ("posterior_merge", 2)]
+)
+def test_predictive_std_calibration(name, num_partitions):
+    """Gate 7: posterior-width sanity on data with known noise. The
+    synthetic generator adds N(0, 0.3^2) observation noise; if the
+    posterior widths are sane, standardized held-out residuals
+    z = (y - mean) / sqrt(std^2 + 1/alpha) have rms near 1. A collapsed
+    posterior (std -> 0) or an overconfident merge inflates rms(z) far
+    past the recorded band; an inflated posterior deflates it."""
+    coo = _coo()
+    cfg = _cfg(name=name, num_partitions=num_partitions)
+    engine = BPMFEngine(cfg).fit(coo)
+    test = _heldout(coo, cfg)
+    preds, std = engine.predict(test.rows, test.cols, return_std=True)
+    z = (test.vals - preds) / np.sqrt(std**2 + 1.0 / engine.cfg.model.alpha)
+    rms_z = float(np.sqrt(np.mean(z**2)))
+    lo, hi = CALIBRATION_RMS_Z_BAND[name]
+    assert lo < rms_z < hi, (
+        f"{name}: observed rms(z) {rms_z:.4f} left the recorded calibration "
+        f"band [{lo}, {hi}] (mean predictive std {float(std.mean()):.4f}, "
+        f"noise_std 0.3, 1/sqrt(alpha) {1.0 / np.sqrt(engine.cfg.model.alpha):.4f})"
+    )

@@ -1,0 +1,314 @@
+"""Unit tier for the ``posterior_merge`` backend's partition/merge core.
+
+Covers the pieces the statistical harness (tests/test_posterior_quality.py)
+takes for granted: the precision-weighted merge against the closed form,
+the pooling fallback's shapes/dtypes, disjoint deterministic per-chain RNG
+streams, the partition round-trip (every rating lands in exactly one
+chain — a hypothesis property test), and checkpoint resume-export bitwise
+parity for a partitioned run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+from repro.core import subset_merge
+from repro.data.sparse import RatingsCOO
+from repro.serve import ARRAY_KEYS, load_artifact
+
+given, settings, st = optional_hypothesis()
+
+
+def _cfg(**kw) -> BPMFConfig:
+    base = dict(name="posterior_merge", num_partitions=2, K=6, num_sweeps=6,
+                burn_in=2, bucket_pads=(8, 32, 128), keep_factor_samples=3)
+    base.update(kw)
+    return BPMFConfig().replace(**base)
+
+
+def _coo(seed: int = 3) -> RatingsCOO:
+    return load_dataset(
+        "synthetic", num_users=90, num_movies=45, nnz=1000, noise_std=0.3, seed=seed
+    )
+
+
+# --------------------------------------------------------------------------
+# merge math
+# --------------------------------------------------------------------------
+
+
+def test_precision_merge_closed_form():
+    """Hand-computed 2-chain product of Gaussians: N(1,1) x N(3,1/2) has
+    precision 3 and mean (1*1 + 2*3)/3 = 7/3."""
+    means = np.array([[1.0], [3.0]])
+    variances = np.array([[1.0], [0.5]])
+    mean, var = subset_merge.precision_merge(means, variances, eps=0.0)
+    np.testing.assert_allclose(mean, [7.0 / 3.0], rtol=1e-6)
+    np.testing.assert_allclose(var, [1.0 / 3.0], rtol=1e-6)
+
+
+def test_merge_weights_match_closed_form():
+    """``merge_chain_trees`` with window-estimated precisions must combine
+    the chain means exactly as the closed-form product of the window
+    Gaussians does."""
+    rng = np.random.default_rng(0)
+    C, S, N, K = 2, 5, 4, 3
+    windows = rng.normal(size=(C, S, N, K)) * np.array([0.5, 2.0])[:, None, None, None]
+    trees = []
+    count = 7
+    for c in range(C):
+        trees.append({
+            "U_sum": rng.normal(size=(2, K)).astype(np.float32) * count,
+            "V_sum": (windows[c].mean(axis=0) * count).astype(np.float32),
+            "count": np.asarray(count, np.int32),
+            "U_samples": rng.normal(size=(S, 2, K)).astype(np.float32),
+            "V_samples": windows[c].astype(np.float32),
+        })
+    user_sets = [np.array([0, 2]), np.array([1, 3])]
+    # align=False: the synthetic chains share no rotation to undo, and the
+    # closed form below is computed in the trees' own coordinates
+    out = subset_merge.merge_chain_trees(trees, user_sets, num_users=4, align=False)
+
+    var = windows.astype(np.float64).var(axis=1, ddof=1)
+    means = np.stack([np.asarray(t["V_sum"], np.float64) / count for t in trees])
+    ref_mean, _ = subset_merge.precision_merge(means, var, eps=subset_merge.MERGE_EPS)
+    np.testing.assert_allclose(out["V_mean"], ref_mean, rtol=1e-4)
+    assert out["count"] == count
+
+
+def test_pool_fallback_shapes_and_dtypes():
+    """``method="pool"`` (and precision with < 2 window samples) must
+    produce uniform weights and artifact-schema float32 shapes."""
+    rng = np.random.default_rng(1)
+    C, S, N, K, M = 3, 1, 5, 2, 6
+    user_sets = [np.array([0, 1]), np.array([2, 3]), np.array([4, 5])]
+    trees = []
+    for c in range(C):
+        trees.append({
+            "U_sum": rng.normal(size=(2, K)).astype(np.float32),
+            "V_sum": rng.normal(size=(N, K)).astype(np.float32),
+            "count": np.asarray(2, np.int32),
+            "U_samples": rng.normal(size=(S, 2, K)).astype(np.float32),
+            "V_samples": rng.normal(size=(S, N, K)).astype(np.float32),
+        })
+    for method in ("pool", "precision"):  # S=1: precision must fall back
+        out = subset_merge.merge_chain_trees(
+            trees, user_sets, num_users=M, method=method, align=False
+        )
+        assert out["U_mean"].shape == (M, K) and out["U_mean"].dtype == np.float32
+        assert out["V_mean"].shape == (N, K) and out["V_mean"].dtype == np.float32
+        assert out["U_samples"].shape == (S, M, K)
+        assert out["V_samples"].shape == (S, N, K)
+        # uniform weights: merged mean == plain mean of chain means
+        ref = np.mean([t["V_sum"] / np.float32(2) for t in trees], axis=0)
+        np.testing.assert_allclose(out["V_mean"], ref, rtol=1e-6)
+        # U scatters from the owning chain, unweighted
+        np.testing.assert_allclose(
+            out["U_mean"][user_sets[1]], trees[1]["U_sum"] / np.float32(2), rtol=1e-6
+        )
+
+
+def test_procrustes_alignment_recovers_rotation():
+    """A chain whose factors are an exact orthogonal rotation of the
+    reference chain must be rotated back onto it, without changing that
+    chain's own predictions (U R)(V R)^T = U V^T."""
+    rng = np.random.default_rng(2)
+    N, K, S = 8, 3, 2
+    base = {
+        "U_sum": rng.normal(size=(4, K)).astype(np.float32),
+        "V_sum": rng.normal(size=(N, K)).astype(np.float32),
+        "count": np.asarray(5, np.int32),
+        "U_samples": rng.normal(size=(S, 4, K)).astype(np.float32),
+        "V_samples": rng.normal(size=(S, N, K)).astype(np.float32),
+    }
+    R0, _ = np.linalg.qr(rng.normal(size=(K, K)))
+    R0 = R0.astype(np.float32)
+    rotated = {
+        k: (v if k == "count" else v @ R0) for k, v in base.items()
+    }
+    aligned = subset_merge.align_chain_trees([base, rotated])
+    # chain 0 aligns onto itself (Procrustes of A onto A is the identity);
+    # chain 1's rotation is undone exactly (up to f32 round-trip)
+    for k in ("U_sum", "V_sum", "U_samples", "V_samples"):
+        np.testing.assert_allclose(aligned[0][k], base[k], atol=1e-5)
+        np.testing.assert_allclose(aligned[1][k], base[k], atol=1e-5)
+    # prediction invariance of the alignment map on the rotated chain
+    np.testing.assert_allclose(
+        aligned[1]["U_sum"] @ aligned[1]["V_sum"].T,
+        rotated["U_sum"] @ rotated["V_sum"].T,
+        atol=1e-4,
+    )
+
+
+def test_merge_weights_validation():
+    windows = np.zeros((2, 3, 4, 2), np.float32)
+    with pytest.raises(ValueError, match="merge_method"):
+        subset_merge.merge_weights(windows, method="bogus")
+    w = subset_merge.merge_weights(windows, method="precision")
+    # constant windows: precisions equal -> uniform
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, rtol=1e-6)
+    with pytest.raises(ValueError, match="lock-step"):
+        subset_merge.merge_chain_trees(
+            [
+                {"count": np.asarray(1, np.int32), "V_samples": np.zeros((0, 0, 0))},
+                {"count": np.asarray(2, np.int32), "V_samples": np.zeros((0, 0, 0))},
+            ],
+            [np.array([0]), np.array([1])],
+            num_users=2,
+        )
+
+
+# --------------------------------------------------------------------------
+# partitioning
+# --------------------------------------------------------------------------
+
+
+def test_partition_round_trip():
+    """Every rating must land in exactly one chain, keyed by its user."""
+    coo = _coo()
+    user_sets = subset_merge.partition_users(coo, 4)
+    assert np.array_equal(
+        np.sort(np.concatenate(user_sets)), np.arange(coo.num_users)
+    )
+    subs = subset_merge.split_by_users(coo, user_sets)
+    assert sum(s.nnz for s in subs) == coo.nnz
+    merged = sorted(
+        zip(
+            np.concatenate([s.rows for s in subs]).tolist(),
+            np.concatenate([s.cols for s in subs]).tolist(),
+            np.concatenate([s.vals for s in subs]).tolist(),
+        )
+    )
+    original = sorted(zip(coo.rows.tolist(), coo.cols.tolist(), coo.vals.tolist()))
+    assert merged == original
+
+
+@given(
+    num_users=st.integers(min_value=1, max_value=20),
+    num_partitions=st.integers(min_value=1, max_value=5),
+    ratings=st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=19),
+            st.integers(min_value=0, max_value=9),
+            st.floats(min_value=1.0, max_value=5.0, allow_nan=False),
+        ),
+        max_size=60,
+    ),
+    strategy=st.sampled_from(["lpt", "block", "naive"]),
+)
+@settings(max_examples=50, deadline=None)
+def test_partition_round_trip_property(num_users, num_partitions, ratings, strategy):
+    """Property: for any COO and any chain count <= num_users, the
+    partition covers every user once and the split covers every rating
+    exactly once (as a multiset)."""
+    num_partitions = min(num_partitions, num_users)
+    rows = np.asarray([r[0] % num_users for r in ratings], np.int32)
+    cols = np.asarray([r[1] for r in ratings], np.int32)
+    vals = np.asarray([r[2] for r in ratings], np.float32)
+    coo = RatingsCOO(rows, cols, vals, num_users, 10)
+    user_sets = subset_merge.partition_users(coo, num_partitions, strategy=strategy)
+    covered = np.concatenate(user_sets) if user_sets else np.zeros(0, np.int64)
+    assert np.array_equal(np.sort(covered), np.arange(num_users))
+    subs = subset_merge.split_by_users(coo, user_sets)
+    merged = sorted(
+        (int(r), int(c), float(v))
+        for s in subs
+        for r, c, v in zip(s.rows, s.cols, s.vals)
+    )
+    original = sorted(
+        (int(r), int(c), float(v)) for r, c, v in zip(rows, cols, vals)
+    )
+    assert merged == original
+    # localization round-trips through the per-chain id space
+    for s, uids in zip(subs, user_sets):
+        local = subset_merge.localize_users(s, uids)
+        assert local.num_users == len(uids)
+        np.testing.assert_array_equal(uids[local.rows], s.rows)
+
+
+def test_partition_users_validation():
+    coo = _coo()
+    with pytest.raises(ValueError, match="num_partitions"):
+        subset_merge.partition_users(coo, 0)
+    with pytest.raises(ValueError, match="num_partitions"):
+        subset_merge.partition_users(coo, coo.num_users + 1)
+
+
+# --------------------------------------------------------------------------
+# chain RNG streams
+# --------------------------------------------------------------------------
+
+
+def test_chain_rng_disjoint_and_deterministic():
+    """Chains must evolve under distinct randomness (their V factors see
+    the same data side, so identical streams would be an aliasing bug) and
+    the whole partitioned run must be bitwise reproducible."""
+    coo = _coo()
+    e1 = BPMFEngine(_cfg()).fit(coo)
+    e2 = BPMFEngine(_cfg()).fit(coo)
+    # deterministic: same seed -> bitwise identical factors and artifact
+    for a, b in zip(e1.factors(), e2.factors()):
+        np.testing.assert_array_equal(a, b)
+    s1, s2 = e1.state
+    # disjoint streams: both chains sample the full movie side from the
+    # same init, so equal V's would mean shared randomness
+    assert not np.array_equal(np.asarray(s1.V), np.asarray(s2.V))
+    # and the streams are the documented fold_in(run_key, chain)
+    import jax
+
+    k1 = subset_merge.chain_key(e1._k_run, 0)
+    k2 = subset_merge.chain_key(e1._k_run, 1)
+    assert not np.array_equal(jax.random.key_data(k1), jax.random.key_data(k2))
+
+
+def test_chain_init_matches_sequential_rows():
+    """U rows are initialized by original user id, so each chain's init is
+    the sequential backend's rows for its partition (same seed)."""
+    coo = _coo()
+    merge = BPMFEngine(_cfg())
+    merge.prepare(coo)
+    merge._ensure_state()
+    seq = BPMFEngine(_cfg(name="sequential"))
+    seq.prepare(coo)
+    seq._ensure_state()
+    seq_U = np.asarray(seq.state.U)
+    for st_c, uids in zip(merge.state, merge.backend.user_sets):
+        np.testing.assert_array_equal(np.asarray(st_c.U), seq_U[uids])
+        np.testing.assert_array_equal(np.asarray(st_c.V), np.asarray(seq.state.V))
+
+
+# --------------------------------------------------------------------------
+# checkpoint / resume
+# --------------------------------------------------------------------------
+
+
+def test_resumed_merge_run_exports_identical_artifact(tmp_path):
+    """Mirror of the PR-4/PR-5 parity tests for the partitioned backend:
+    interrupting mid-run (between blocks) and resuming must export bitwise
+    the artifact of an uninterrupted run — per-chain states, accumulators
+    and RNG all restore exactly."""
+    coo = _coo(seed=5)
+    cfg = _cfg(num_sweeps=6, sweeps_per_block=3,
+               checkpoint_dir=str(tmp_path / "ckpt"))
+    full = BPMFEngine(cfg).fit(coo)
+    full_path = full.export(str(tmp_path / "full"))
+
+    interrupted = BPMFEngine(cfg)
+    it = interrupted.sample(coo)
+    for _ in range(3):
+        next(it)
+    interrupted.save()
+    del interrupted, it
+
+    resumed = BPMFEngine(cfg)
+    resumed.restore(coo)
+    resumed.fit()
+    resumed_path = resumed.export(str(tmp_path / "resumed"))
+
+    m1, a1 = load_artifact(full_path)
+    m2, a2 = load_artifact(resumed_path)
+    assert m1 == m2
+    for k in ARRAY_KEYS:
+        np.testing.assert_array_equal(a1[k], a2[k], err_msg=k)
