@@ -14,8 +14,19 @@ over the per-sweep host round-trip it replaced, across
   cost). The gap between its ``host_bytes_per_sweep`` and any blocked
   entry's is ≥ the factor-gather size — the acceptance bar of the refactor.
 
-Bitwise parity across block sizes is re-checked on the gathered factors
-(``parity_ok``). Emits ``experiments/bench/sweep_throughput.json`` (schema
+The overlapped pipeline (DESIGN.md §13) gets its own columns per backend:
+``overlap_off`` / ``overlap_on`` time the same blocked run at
+``pipeline_blocks`` 1 vs 2 and record ``host_blocked_s_per_block`` — the
+wall-clock the engine spent blocked on metric materialization per block,
+the time the pipeline exists to hide. ``save_return_latency`` times how
+fast ``engine.save()`` returns with async vs sync checkpoint commits.
+``overlap_speedup_ok`` records whether overlap-on beat overlap-off; on CPU
+host meshes the mechanisms share the same cores, so the schema check warns
+rather than fails when it is False — CPU numbers order mechanisms only.
+
+Bitwise parity across block sizes and pipeline depths is re-checked on the
+gathered factors (``parity_ok``). Emits
+``experiments/bench/sweep_throughput.json`` (schema
 in experiments/bench/README.md, validated by
 ``scripts/check_bench_schema.py sweep_throughput``). Run inside a forced
 multi-device process, e.g.::
@@ -71,6 +82,38 @@ def _legacy_emulated(cfg, coo):
             gathered += U.nbytes + V.nbytes
     t = time.time() - t0
     return engine, t, gathered + engine.host_metric_bytes
+
+
+def _save_latency(cfg, coo):
+    """Measured ``engine.save()`` return latency: async vs sync commit.
+
+    Same state size as the benchmark workload (latency scales with the
+    snapshot), few sweeps (latency does not). ``async_returns_faster`` is
+    recorded, not asserted — for tiny checkpoints the thread handoff can
+    rival the write itself.
+    """
+    import shutil
+    import tempfile
+
+    from repro.bpmf import BPMFEngine
+
+    out: dict = {}
+    for label, async_w in (("async_s", True), ("sync_s", False)):
+        d = tempfile.mkdtemp(prefix="bpmf-savelat-")
+        try:
+            engine = BPMFEngine(cfg.replace(
+                num_sweeps=2, burn_in=1, checkpoint_dir=d,
+                async_checkpoint_writes=async_w,
+            ))
+            engine.fit(coo)
+            t0 = time.perf_counter()
+            engine.save()
+            out[label] = time.perf_counter() - t0
+            engine._ckpt.close()  # join the writer before removing the dir
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    out["async_returns_faster"] = out["async_s"] <= out["sync_s"]
+    return out
 
 
 def run(smoke: bool = False, out_path: str | None = None) -> dict:
@@ -133,9 +176,41 @@ def run(smoke: bool = False, out_path: str | None = None) -> dict:
         }
         print(f"[sweep_throughput] {name} legacy: {t:.3f}s "
               f"({legacy_bytes / sweeps:.0f} B/sweep)")
+        # overlap columns (DESIGN.md §13): same blocked run at pipeline
+        # depth 1 vs 2, spb=4 so several blocks are actually in flight
+        spb_ov = 4
+        nblocks = -(-sweeps // spb_ov)
+        for label, depth in (("overlap_off", 1), ("overlap_on", 2)):
+            cfg = base.replace(name=name, sweeps_per_block=spb_ov,
+                               pipeline_blocks=depth)
+            engine, t = _fit_timed(cfg, coo)
+            U, V = engine.factors()
+            parity = parity and np.array_equal(U, factors0[0]) \
+                and np.array_equal(V, factors0[1])
+            entries[label] = {
+                "pipeline_blocks": depth,
+                "seconds": t,
+                "sweeps_per_sec": sweeps / t,
+                "host_bytes_per_sweep": engine.host_metric_bytes / sweeps,
+                "host_blocked_s_per_block": engine.host_blocked_s / nblocks,
+                "rmse": engine.rmse,
+            }
+            print(f"[sweep_throughput] {name} {label}: {t:.3f}s "
+                  f"({engine.host_blocked_s / nblocks * 1e6:.0f} us "
+                  f"host-blocked/block)")
         out["backends"][name] = entries
 
     out["parity_ok"] = parity
+    # recorded, warn-only in the schema check: on CPU host meshes the
+    # overlapped mechanisms contend for the same cores
+    out["overlap_speedup_ok"] = all(
+        e["overlap_on"]["seconds"] <= e["overlap_off"]["seconds"]
+        for e in out["backends"].values()
+    )
+    out["save_return_latency"] = _save_latency(base.replace(name="sequential"), coo)
+    print(f"[sweep_throughput] save() return latency: "
+          f"async {out['save_return_latency']['async_s'] * 1e3:.2f} ms, "
+          f"sync {out['save_return_latency']['sync_s'] * 1e3:.2f} ms")
     # acceptance: for block > 1 the per-post-burn-in-sweep host traffic
     # drops vs the legacy loop by at least the factor-gather size
     gather = out["factor_gather_bytes"]

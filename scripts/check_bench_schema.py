@@ -169,6 +169,35 @@ def check_sweep_throughput(payload: dict) -> list[str]:
                 f"backends[{name}].legacy_emulated."
                 "host_bytes_per_post_burn_in_sweep: missing or non-numeric"
             )
+        # overlap columns (DESIGN.md §13): both depths present, each with
+        # the host-blocked accounting the pipeline exists to shrink
+        for label in ("overlap_off", "overlap_on"):
+            e = entries.get(label)
+            where = f"backends[{name}].{label}"
+            if not isinstance(e, dict):
+                errs.append(f"{where}: missing overlap entry")
+                continue
+            if not isinstance(e.get("pipeline_blocks"), int) or e["pipeline_blocks"] < 1:
+                errs.append(f"{where}.pipeline_blocks: missing or < 1")
+            hb = e.get("host_blocked_s_per_block")
+            if not isinstance(hb, (int, float)) or hb < 0:
+                errs.append(f"{where}.host_blocked_s_per_block: missing or negative")
+    if not isinstance(payload.get("overlap_speedup_ok"), bool):
+        errs.append("overlap_speedup_ok: missing or non-bool")
+    elif not payload["overlap_speedup_ok"]:
+        # warn, never fail: on CPU host meshes pipelined blocks contend for
+        # the same cores, so overlap-on beating overlap-off is not a given
+        print("sweep_throughput: warning — overlap_speedup_ok is False "
+              "(overlap-on slower than overlap-off; expected on CPU meshes, "
+              "where the numbers order mechanisms only)")
+    lat = payload.get("save_return_latency")
+    if not isinstance(lat, dict) or not all(
+        isinstance(lat.get(k), (int, float)) and lat.get(k, 0) > 0
+        for k in ("async_s", "sync_s")
+    ):
+        errs.append("save_return_latency: needs positive numeric async_s and sync_s")
+    elif not isinstance(lat.get("async_returns_faster"), bool):
+        errs.append("save_return_latency.async_returns_faster: missing or non-bool")
     return errs
 
 

@@ -29,6 +29,11 @@
 #                                       #   run -> export -> serve one-shot;
 #                                       #   fig_merge_comm --smoke + JSON
 #                                       #   schema check
+#   scripts/test.sh --overlap-smoke     # + depth-2 pipelined CLI run with a
+#                                       #   mid-run checkpoint -> resume ->
+#                                       #   export; sweep_throughput --smoke
+#                                       #   (overlap + save-latency columns)
+#                                       #   + JSON schema check
 #
 # Benchmark smoke runs write to temp --out paths (never the committed
 # experiments/bench JSONs); each stanza schema-checks its temp output via
@@ -51,6 +56,7 @@ SERVE_SMOKE=0
 BLOCK_SMOKE=0
 SERVER_SMOKE=0
 MERGE_SMOKE=0
+OVERLAP_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
@@ -65,6 +71,8 @@ for a in "$@"; do
     SERVER_SMOKE=1
   elif [[ "$a" == "--merge-smoke" ]]; then
     MERGE_SMOKE=1
+  elif [[ "$a" == "--overlap-smoke" ]]; then
+    OVERLAP_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -254,6 +262,34 @@ if [[ "$MERGE_SMOKE" == 1 ]]; then
   python scripts/check_bench_schema.py fig_merge_comm --path "$MERGE_TMP/fig_merge_comm.json"
   python scripts/check_bench_schema.py fig_merge_comm
   rm -rf "$MERGE_TMP"
+fi
+
+if [[ "$OVERLAP_SMOKE" == 1 ]]; then
+  echo "== overlap smoke: depth-2 pipelined run -> checkpoint -> resume -> export =="
+  OV_TMP="$(mktemp -d)"
+  OART="$OV_TMP/artifact"
+  python -m repro.launch.bpmf --backend ring --dataset synthetic \
+    --sweeps 8 --sweeps-per-block 2 --pipeline-blocks 2 --burn-in 2 --K 4 \
+    --users 80 --movies 40 --nnz 800 \
+    --checkpoint-dir "$OV_TMP/ckpt" --checkpoint-every 3
+  # a mid-run checkpoint exists (sweep 6: auto-save cadence held under the
+  # pipeline); resume it with the overlapped loop, finish, export
+  test -d "$OV_TMP/ckpt/step_00000006"
+  python -m repro.launch.bpmf --backend ring --dataset synthetic \
+    --sweeps 8 --sweeps-per-block 2 --pipeline-blocks 2 --burn-in 2 --K 4 \
+    --users 80 --movies 40 --nnz 800 \
+    --checkpoint-dir "$OV_TMP/ckpt" --resume \
+    --export-artifact "$OART"
+  python -m repro.launch.serve --artifact "$OART" --rows 0,1,2 --cols 0,1,2
+  # donation fallback path stays runnable
+  python -m repro.launch.bpmf --backend sequential --dataset synthetic \
+    --sweeps 2 --burn-in 1 --K 4 --users 80 --movies 40 --nnz 800 \
+    --pipeline-blocks 2 --donate-blocks off --sync-checkpoint-writes
+  echo "== sweep_throughput smoke (overlap + save-latency columns) + schema check =="
+  python -m benchmarks.sweep_throughput --smoke --out "$OV_TMP/sweep_throughput.json"
+  python scripts/check_bench_schema.py sweep_throughput --path "$OV_TMP/sweep_throughput.json"
+  python scripts/check_bench_schema.py sweep_throughput
+  rm -rf "$OV_TMP"
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

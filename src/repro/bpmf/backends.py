@@ -260,6 +260,10 @@ class Backend(abc.ABC):
         self.cfg = cfg
         self.core_cfg = cfg.core()
         self._prepared = False
+        # "auto" donates: XLA reuses the block carry's buffers on every
+        # platform we run on, and samples are unaffected. "off" is the
+        # fallback path for callers that re-read a block's inputs.
+        self.donate_blocks = cfg.backend.donate_blocks in ("auto", "on")
 
     # ------------------------------------------------------------------
     @abc.abstractmethod
@@ -408,9 +412,12 @@ class SequentialBackend(Backend):
         self, key: jax.Array, state, pred: PredictionState,
         accum: PosteriorAccum, block_size: int,
     ):
-        return gibbs.gibbs_sweep_block(
-            key, state, pred, accum, self.data, self.core_cfg, block_size
+        fn = (
+            gibbs.gibbs_sweep_block_donated
+            if self.donate_blocks
+            else gibbs.gibbs_sweep_block
         )
+        return fn(key, state, pred, accum, self.data, self.core_cfg, block_size)
 
     def factors(self, state) -> tuple[np.ndarray, np.ndarray]:
         return np.asarray(state.U), np.asarray(state.V)
@@ -492,7 +499,12 @@ class DistributedBackend(Backend):
         self, key: jax.Array, state, pred: PredictionState,
         accum: PosteriorAccum, block_size: int,
     ):
-        return dist.dist_gibbs_sweep_block(
+        fn = (
+            dist.dist_gibbs_sweep_block_donated
+            if self.donate_blocks
+            else dist.dist_gibbs_sweep_block
+        )
+        return fn(
             key, state, pred, accum, self.data, self.core_cfg, self.mesh, block_size
         )
 
@@ -698,10 +710,15 @@ class PosteriorMergeBackend(Backend):
     def sweep_block(
         self, key: jax.Array, state, pred, accum: MergeAccum, block_size: int
     ):
+        fn = (
+            gibbs.gibbs_sweep_block_donated
+            if self.donate_blocks
+            else gibbs.gibbs_sweep_block
+        )
         outs = []
         for c in range(self.num_partitions):
             outs.append(
-                gibbs.gibbs_sweep_block(
+                fn(
                     subset_merge.chain_key(key, c), state[c], pred[c],
                     accum.chains[c], self.chain_data[c], self.core_cfg, block_size,
                 )
@@ -825,6 +842,8 @@ def run_sequential_prepared(
     accum = PosteriorAccum.init(data.num_users, data.num_movies, core_cfg.K, keep=0)
     history: list[SweepMetrics] = []
     for _ in range(core_cfg.num_sweeps):
+        # non-donating on purpose: the callback may retain the state it is
+        # handed, which the next iteration would otherwise consume
         state, pred_state, accum, rows = gibbs.gibbs_sweep_block(
             k_run, state, pred_state, accum, data, core_cfg, 1
         )

@@ -88,6 +88,24 @@ class RunConfig:
         checkpoint_every: Sweeps between auto-saves; 0 = explicit
             ``save()`` only.
         keep_checkpoints: Retention window (older steps are pruned).
+        pipeline_blocks: Depth of the engine's block dispatch queue
+            (DESIGN.md §13). With depth d > 1 the run loop launches the
+            next device block on the still-on-device carry *before*
+            fetching the previous block's metrics, so the host never sits
+            between blocks; metric transfers complete asynchronously and
+            drain d-1 blocks behind the dispatch front. The queue drains
+            fully at ``checkpoint_every`` boundaries, at user ``save()`` /
+            ``export()`` calls and at the end of the run, so the
+            one-``SweepMetrics``-per-sweep iterator contract, history
+            ordering and checkpoint cadence are bitwise identical at every
+            depth. ``1`` reproduces the synchronous PR-5 loop.
+        async_checkpoint_writes: Write checkpoints on the manager's
+            background thread (DESIGN.md §13): ``save()`` snapshots host
+            arrays and returns without waiting for the filesystem commit,
+            keeping checkpoints off the dispatch critical path. The commit
+            itself stays atomic (tmp-dir rename + ``LATEST`` replace);
+            ``export()`` / ``restore()`` / process exit drain pending
+            writes. ``False`` restores fully synchronous saves.
         keep_factor_samples: Most recent post-burn-in ``(U, V)`` samples
             retained for the serving artifact's predictive-std output
             (DESIGN.md §9); 0 keeps only the running posterior mean and
@@ -98,6 +116,8 @@ class RunConfig:
     burn_in: int = 8
     seed: int = 0  # seeds both the train/test split and the sampler key
     sweeps_per_block: int = 8  # sweeps per jitted device block (1 = per-sweep)
+    pipeline_blocks: int = 1  # block dispatch queue depth (1 = synchronous)
+    async_checkpoint_writes: bool = True  # background checkpoint commit
     test_fraction: float = 0.1
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0  # sweeps between auto-saves; 0 = explicit save() only
@@ -114,6 +134,11 @@ class RunConfig:
             raise ValueError(
                 f"RunConfig.sweeps_per_block must be >= 1, "
                 f"got {self.sweeps_per_block}"
+            )
+        if self.pipeline_blocks < 1:
+            raise ValueError(
+                f"RunConfig.pipeline_blocks must be >= 1, "
+                f"got {self.pipeline_blocks}"
             )
 
 
@@ -164,6 +189,15 @@ class BackendConfig:
             product estimated from the chains' sample windows,
             arXiv:1703.00734; falls back to pooling when fewer than two
             window samples exist) or ``"pool"`` (uniform-weight pooling).
+        donate_blocks: Whether the engine's block programs donate their
+            carry buffers (``donate_argnums`` on state / prediction /
+            posterior accumulators, DESIGN.md §13) so XLA writes each
+            block's outputs into the previous block's buffers instead of
+            doubling peak factor memory: ``"auto"`` (default — donate;
+            samples are unaffected, only buffer reuse changes),
+            ``"on"``, or ``"off"`` (the fallback path: every block
+            allocates fresh outputs, inputs stay readable — use when
+            wrapping ``sweep_block`` with code that re-reads its inputs).
     """
 
     name: str = "sequential"
@@ -175,8 +209,14 @@ class BackendConfig:
     partition_strategy: str = "lpt"  # cost-model balancing (paper §IV-B)
     num_partitions: int = 0  # posterior_merge: chains (0 = one per device)
     merge_method: str = "precision"  # posterior_merge: precision | pool
+    donate_blocks: str = "auto"  # block carry donation: auto | on | off
 
     def __post_init__(self) -> None:
+        if self.donate_blocks not in ("auto", "on", "off"):
+            raise ValueError(
+                f'BackendConfig.donate_blocks must be "auto", "on" or "off", '
+                f"got {self.donate_blocks!r}"
+            )
         if self.pipeline_depth < 1:
             raise ValueError(
                 f"BackendConfig.pipeline_depth must be >= 1, got {self.pipeline_depth}"

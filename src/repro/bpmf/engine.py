@@ -22,15 +22,21 @@ Determinism note: the sampler key is derived from ``RunConfig.seed`` and
 per-sweep keys from ``(key, state.sweep)``, so a run restored from a
 checkpoint continues with *identical* randomness to an uninterrupted one.
 
-Run-loop note (DESIGN.md §10): sweeps execute in jitted device blocks of
-``RunConfig.sweeps_per_block`` with one host sync per block — posterior-mean
-sums, the recent-sample window and the prediction accumulator fold on-device
-in the block's scan carry, and per-sweep metrics arrive as one stacked
-transfer. Samples, metrics, checkpoints and exported artifacts are bitwise
-identical at every block size.
+Run-loop note (DESIGN.md §10, §13): sweeps execute in jitted device blocks
+of ``RunConfig.sweeps_per_block`` with one host sync per block —
+posterior-mean sums, the recent-sample window and the prediction accumulator
+fold on-device in the block's scan carry, and per-sweep metrics arrive as
+one stacked transfer. With ``RunConfig.pipeline_blocks > 1`` the loop is
+additionally *pipelined*: the next block dispatches on the still-on-device
+carry before the previous block's metrics are fetched, the metric transfer
+completes asynchronously, and checkpoint writes commit on a background
+thread. Samples, metrics, checkpoints and exported artifacts are bitwise
+identical at every block size and every pipeline depth.
 """
 from __future__ import annotations
 
+import time
+from collections import deque
 from typing import Iterator, Optional
 
 import jax
@@ -102,6 +108,11 @@ class BPMFEngine:
         # bytes fetched from device for metrics, summed over the run — what
         # benchmarks/sweep_throughput.py reports as host traffic per sweep
         self.host_metric_bytes = 0
+        # seconds the host spent blocked on metric fetches, summed over the
+        # run (the wait the pipelined dispatch queue exists to hide)
+        self.host_blocked_s = 0.0
+        # dispatched-but-not-yet-fetched blocks: (block_len, metrics rows)
+        self._inflight: deque[tuple[int, object]] = deque()
         key = jax.random.key(self.cfg.run.seed)
         self._k_init, self._k_run = jax.random.split(key)
 
@@ -149,7 +160,7 @@ class BPMFEngine:
             self._ckpt = CheckpointManager(
                 self.cfg.run.checkpoint_dir,
                 keep=self.cfg.run.keep_checkpoints,
-                async_writes=False,
+                async_writes=self.cfg.run.async_checkpoint_writes,
             )
         return self._ckpt
 
@@ -167,6 +178,30 @@ class BPMFEngine:
             n = min(n, run.checkpoint_every - self._sweeps_done % run.checkpoint_every)
         return max(n, 1)
 
+    def _drain_one(self) -> None:
+        """Fetch the oldest in-flight block's metrics into ``history``.
+
+        The single host materialization per block: ``np.asarray`` completes
+        the transfer that ``copy_to_host_async`` started at dispatch time
+        (a no-op view for backends that already returned host rows), and the
+        byte counter sees that one buffer.
+        """
+        n, rows = self._inflight.popleft()
+        t0 = time.perf_counter()
+        rows = np.asarray(rows)
+        self.host_blocked_s += time.perf_counter() - t0
+        self.host_metric_bytes += int(rows.nbytes)
+        self.history.extend(
+            SweepMetrics(float(r[0]), float(r[1]), float(r[2])) for r in rows
+        )
+
+    def _drain_inflight(self) -> None:
+        """Drain every dispatched block's metrics into ``history`` — the
+        pipeline barrier ``save()`` / ``export()`` / checkpoint boundaries
+        and the iterator end run through."""
+        while self._inflight:
+            self._drain_one()
+
     def sample(self, data: RatingsCOO | None = None) -> Iterator[SweepMetrics]:
         """Stream per-sweep metrics from the current sweep to ``num_sweeps``.
 
@@ -177,12 +212,18 @@ class BPMFEngine:
         Execution is *blocked* (DESIGN.md §10): sweeps run on-device in
         jitted blocks of ``RunConfig.sweeps_per_block`` with a single host
         sync per block, and the block's metrics are then yielded one per
-        sweep. The public iterator contract is unchanged — one
-        :class:`SweepMetrics` per sweep, in sweep order, with history
-        ordering and ``checkpoint_every`` cadence identical at every block
-        size — but metrics for sweeps of the same block become available
-        together, and abandoning the iterator mid-block leaves the engine
-        advanced to the end of the last executed block.
+        sweep. With ``RunConfig.pipeline_blocks = d > 1`` the loop is also
+        *pipelined* (DESIGN.md §13): up to ``d`` blocks are dispatched ahead
+        of the metrics drain, each block's metric transfer completes
+        asynchronously while later blocks compute, and the queue drains
+        fully at ``checkpoint_every`` boundaries and the end of the run.
+        The public iterator contract is unchanged at every block size and
+        depth — one :class:`SweepMetrics` per sweep, in sweep order, with
+        identical history ordering and checkpoint cadence — but metrics for
+        sweeps of the same block become available together, and abandoning
+        the iterator mid-run leaves the engine advanced to the end of the
+        last *dispatched* block (a later ``save()`` / ``export()`` /
+        ``sample()`` call drains the remaining in-flight metrics).
 
         Args:
             data: Ratings to ``prepare()`` first, if not already prepared.
@@ -194,21 +235,36 @@ class BPMFEngine:
         if data is not None:
             self.prepare(data)
         self._ensure_state()
-        every = self.cfg.run.checkpoint_every
-        while self._sweeps_done < self.cfg.run.num_sweeps:
-            n = self._next_block_len()
-            self._state, self._pred, self._accum, rows = self.backend.sweep_block(
-                self._k_run, self._state, self._pred, self._accum, n
-            )
-            rows = np.asarray(jax.device_get(rows))  # the block's one host sync
-            self.host_metric_bytes += int(rows.nbytes)
-            self._sweeps_done += n
-            block = [
-                SweepMetrics(float(r[0]), float(r[1]), float(r[2])) for r in rows
-            ]
-            self.history.extend(block)
-            if every and self._sweeps_done % every == 0:
+        run = self.cfg.run
+        every = run.checkpoint_every
+        depth = run.pipeline_blocks
+        yielded = len(self.history)
+        while self._sweeps_done < run.num_sweeps or self._inflight:
+            # dispatch up to `depth` blocks ahead of the drain, stopping at
+            # checkpoint boundaries so the boundary carry is still the
+            # engine's current state when save() snapshots it
+            while self._sweeps_done < run.num_sweeps and len(self._inflight) < depth:
+                n = self._next_block_len()
+                self._state, self._pred, self._accum, rows = self.backend.sweep_block(
+                    self._k_run, self._state, self._pred, self._accum, n
+                )
+                try:
+                    rows.copy_to_host_async()  # start the metrics transfer now
+                except AttributeError:  # backend already returned host rows
+                    pass
+                self._inflight.append((n, rows))
+                self._sweeps_done += n
+                if every and self._sweeps_done % every == 0:
+                    break
+            at_ckpt = every and self._sweeps_done % every == 0
+            final = self._sweeps_done >= run.num_sweeps
+            keep = 0 if (at_ckpt or final) else depth - 1
+            while len(self._inflight) > keep:
+                self._drain_one()
+            if at_ckpt:
                 self.save()
+            block = self.history[yielded:]
+            yielded = len(self.history)
             yield from block
 
     def fit(self, data: RatingsCOO | None = None, resume: bool = False) -> "BPMFEngine":
@@ -242,7 +298,10 @@ class BPMFEngine:
 
     @property
     def num_sweeps_done(self) -> int:
-        """Completed sweeps (``restore()`` positions this at the checkpoint step)."""
+        """Sweeps dispatched to the device so far (``restore()`` positions
+        this at the checkpoint step). At ``pipeline_blocks > 1`` the last
+        ``d - 1`` blocks' metrics may still be in flight; ``save()`` /
+        ``export()`` / finishing the iterator drain them."""
         return self._sweeps_done
 
     @property
@@ -347,6 +406,10 @@ class BPMFEngine:
         :class:`repro.serve.PosteriorPredictor` / ``python -m
         repro.launch.serve`` to load without re-running MCMC.
 
+        A pipeline barrier: in-flight metric blocks drain first, and any
+        checkpoint writes still pending on the async writer commit before
+        the artifact is written.
+
         Args:
             directory: Artifact directory (replaced if it already holds
                 an artifact).
@@ -354,6 +417,9 @@ class BPMFEngine:
         Returns:
             The artifact directory.
         """
+        self._drain_inflight()
+        if self._ckpt is not None:
+            self._ckpt.wait()
         meta, arrays = self._artifact_payload()
         return save_artifact(directory, meta, arrays)
 
@@ -363,6 +429,13 @@ class BPMFEngine:
     def save(self, step: int | None = None) -> int:
         """Checkpoint state, prediction accumulator and metric history.
 
+        Drains in-flight pipeline blocks first, then snapshots host arrays;
+        with ``RunConfig.async_checkpoint_writes`` (the default) the
+        filesystem commit happens on the manager's background thread and
+        this returns as soon as the snapshot is taken — the commit itself
+        is atomic (tmp-dir rename, then ``LATEST`` replace), so a crash
+        mid-write never leaves a torn checkpoint visible.
+
         Args:
             step: Sweep count to label the checkpoint with (default: the
                 current sweep).
@@ -371,6 +444,7 @@ class BPMFEngine:
             The step the checkpoint was written at.
         """
         self._ensure_state()
+        self._drain_inflight()
         step = self._sweeps_done if step is None else step
         hist = np.asarray(
             [[m.rmse_sample, m.rmse_avg, m.sweep] for m in self.history[:step]],
@@ -412,6 +486,8 @@ class BPMFEngine:
         if data is not None:
             self.prepare(data)
         self._ensure_state()
+        # metrics still in flight belong to sweeps the restore rewinds past
+        self._inflight.clear()
         mgr = self._manager()
         step = mgr.latest() if step is None else step
         if step is None:

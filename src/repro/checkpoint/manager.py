@@ -4,12 +4,19 @@ The async writer runs ``save_checkpoint`` on a single worker thread after
 ``jax.device_get`` has snapshotted the arrays (device_get happens on the
 caller thread so the training step can donate/overwrite buffers immediately
 — the classic overlap-checkpoint-IO-with-compute trick). ``wait()`` joins
-outstanding writes; retention prunes beyond ``keep``.
+outstanding writes; retention prunes beyond ``keep``; every live manager is
+drained at interpreter exit (an ``atexit`` hook over a weak set), so a
+process that finishes right after an async ``save()`` still commits it.
+Commits are atomic either way — ``save_checkpoint`` renames a complete
+tmp dir into place and swaps ``LATEST`` via ``os.replace`` — so a crash
+mid-write (even ``os._exit``) never exposes a torn checkpoint.
 """
 from __future__ import annotations
 
+import atexit
 import os
 import shutil
+import weakref
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
@@ -26,6 +33,20 @@ from repro.utils import logger
 
 Tree = Any
 
+# live managers with a worker pool, drained by the atexit hook below; weak
+# references so a dropped manager (and its pool) can still be collected
+_LIVE_MANAGERS: "weakref.WeakSet[CheckpointManager]" = weakref.WeakSet()
+
+
+@atexit.register
+def _drain_managers_at_exit() -> None:
+    """Join every live manager's pending writes at interpreter exit."""
+    for mgr in list(_LIVE_MANAGERS):
+        try:
+            mgr.wait()
+        except Exception:  # pragma: no cover - exit path must not raise
+            logger.exception("checkpoint drain at exit failed for %s", mgr.directory)
+
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_writes: bool = True):
@@ -33,6 +54,8 @@ class CheckpointManager:
         self.keep = keep
         self._pool = ThreadPoolExecutor(max_workers=1) if async_writes else None
         self._pending: list[Future] = []
+        if self._pool is not None:
+            _LIVE_MANAGERS.add(self)
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
@@ -69,6 +92,12 @@ class CheckpointManager:
         return latest_step(self.directory)
 
     def all_steps(self) -> list[int]:
+        self.wait()  # read-your-writes, like latest()/restore()
+        return self._list_steps()
+
+    def _list_steps(self) -> list[int]:
+        """Committed steps on disk right now — no writer join, so this is
+        safe to call from the writer thread itself (``_retain``)."""
         steps = []
         for name in os.listdir(self.directory):
             if name.startswith("step_") and ".tmp" not in name:
@@ -76,7 +105,7 @@ class CheckpointManager:
         return sorted(steps)
 
     def _retain(self) -> None:
-        steps = self.all_steps()
+        steps = self._list_steps()
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)
 

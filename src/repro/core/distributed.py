@@ -730,8 +730,7 @@ def init_dist_accum(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "block_size"))
-def dist_gibbs_sweep_block(
+def _dist_gibbs_sweep_block(
     key: jax.Array,
     state: DistState,
     pred_state: PredictionState,
@@ -777,6 +776,24 @@ def dist_gibbs_sweep_block(
     new_state = DistState(U=U, V=V, hyper_U=hU, hyper_V=hV, sweep=sweep)
     new_pred = PredictionState(sum_pred=psum_, num_samples=pn)
     return new_state, new_pred, accum, metrics
+
+
+dist_gibbs_sweep_block = jax.jit(
+    _dist_gibbs_sweep_block, static_argnames=("cfg", "mesh", "block_size")
+)
+
+#: Carry-donating variant of :func:`dist_gibbs_sweep_block` (same traced
+#: body, same samples): donates the sharded state / prediction / posterior
+#: accumulator inputs so each block's carry reuses the previous block's
+#: shard buffers instead of doubling peak factor memory per device
+#: (DESIGN.md §13). Donated inputs are consumed — callers that re-read a
+#: block's inputs must use the non-donating entry point
+#: (``BackendConfig.donate_blocks="off"``).
+dist_gibbs_sweep_block_donated = jax.jit(
+    _dist_gibbs_sweep_block,
+    static_argnames=("cfg", "mesh", "block_size"),
+    donate_argnums=(1, 2, 3),
+)
 
 
 def run_distributed(

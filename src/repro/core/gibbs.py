@@ -122,8 +122,7 @@ def gibbs_sweep(
     return _sweep_body(key, state, pred_state, data, cfg)
 
 
-@partial(jax.jit, static_argnames=("cfg", "block_size"))
-def gibbs_sweep_block(
+def _gibbs_sweep_block(
     key: jax.Array,
     state: BPMFState,
     pred_state: PredictionState,
@@ -161,6 +160,20 @@ def gibbs_sweep_block(
         body, (state, pred_state, accum), None, length=block_size
     )
     return state, pred_state, accum, metrics
+
+
+gibbs_sweep_block = jax.jit(_gibbs_sweep_block, static_argnames=("cfg", "block_size"))
+
+#: Carry-donating variant of :func:`gibbs_sweep_block` (same traced body,
+#: same samples): the state, prediction and posterior-accumulator inputs are
+#: donated so XLA writes each block's carry into the previous block's
+#: buffers instead of allocating a second factor-sized set (DESIGN.md §13).
+#: The donated inputs are *consumed* — callers that re-read a block's inputs
+#: after the call (or hold external references to them) must use the
+#: non-donating entry point (``BackendConfig.donate_blocks="off"``).
+gibbs_sweep_block_donated = jax.jit(
+    _gibbs_sweep_block, static_argnames=("cfg", "block_size"), donate_argnums=(1, 2, 3)
+)
 
 
 def run(

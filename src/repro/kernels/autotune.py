@@ -7,6 +7,11 @@ size and the hardware. This module owns that choice:
 
 * :func:`decide` — resolve a :class:`ShapeKey` to a :class:`Decision` at
   trace time: exact cache hit first, deterministic heuristic otherwise.
+  Decisions are keyed per bucket *class* as well as per step:
+  ``ops.bpmf_gram_step`` consults the step key first, and when it misses
+  (and the heuristic is not fused) each bucket resolves its own
+  :func:`bucket_key` — so one sweep step can mix Gram implementations
+  across pad classes from a warmed per-bucket cache.
   The heuristic **never times anything**, so CPU/CI runs never block on
   measurement, and it consults the fitted :class:`~repro.core.balance.CostModel`
   from the fig2 microbenchmark — the same regression that weighs items

@@ -203,6 +203,14 @@ def bpmf_gram_step(
     per-bucket loop with ``at[].add`` scatters. ``"pallas_fused"`` forces
     the fused kernel (parity tests / benchmarks).
 
+    When an auto step misses the step-key cache and the heuristic does not
+    pick the fused kernel, each bucket re-resolves its **own** bucket-class
+    key (``autotune.bucket_key``) instead of inheriting one step-wide
+    choice — so a warmed per-bucket cache can mix implementations inside a
+    single step (e.g. the big pad class on Pallas, the tail on XLA). An
+    exact *step*-key cache hit still pins the whole step, so measured
+    ``measure_step`` decisions keep their meaning.
+
     Args:
         G: ``[cap, K, K]`` f32 running Gram accumulator.
         g: ``[cap, K]`` f32 running linear-term accumulator.
@@ -224,8 +232,16 @@ def bpmf_gram_step(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     shapes = [(b.B, b.P) for b in buckets]
+    per_bucket_auto = False
     if gram_impl == "auto":
-        dec = autotune.decide(autotune.step_key(shapes, Ns, K, cap, compute_dtype))
+        skey = autotune.step_key(shapes, Ns, K, cap, compute_dtype)
+        dec = autotune.get_cache().lookup(skey)
+        if dec is None:
+            # no measured step entry: take the heuristic only for the
+            # fused-vs-not call, and let each bucket resolve its own
+            # bucket-class key below (one step may mix impls)
+            dec = autotune.heuristic(skey)
+            per_bucket_auto = dec.impl != "pallas_fused"
     elif gram_impl == "pallas_fused":
         dec = autotune.Decision("pallas_fused", tb, pc, ns_chunk)
     elif gram_impl in ("pallas", "xla"):
@@ -258,14 +274,24 @@ def bpmf_gram_step(
 
     a = jnp.asarray(alpha, jnp.float32)
     for b in buckets:
-        # dispatch per bucket so the decision's (tb, pc, ns_chunk) — from
-        # the cache or explicit overrides — actually reaches the kernel
-        Gb, gb = bpmf_gram(
-            X_src, b.nbr, b.val, b.nnz,
-            compute_dtype=compute_dtype, impl=dec.impl,
-            tb=tb or dec.tb, pc=pc or dec.pc,
-            ns_chunk=ns_chunk or dec.ns_chunk, interpret=interpret,
-        )
+        if per_bucket_auto:
+            # bucket-class dispatch: bpmf_gram resolves this bucket's own
+            # autotune.bucket_key (cache hit or heuristic), so different
+            # pad classes of the same step can take different impls
+            Gb, gb = bpmf_gram(
+                X_src, b.nbr, b.val, b.nnz,
+                compute_dtype=compute_dtype, impl="auto",
+                tb=tb, pc=pc, ns_chunk=ns_chunk, interpret=interpret,
+            )
+        else:
+            # dispatch per bucket so the decision's (tb, pc, ns_chunk) —
+            # from the cache or explicit overrides — reaches the kernel
+            Gb, gb = bpmf_gram(
+                X_src, b.nbr, b.val, b.nnz,
+                compute_dtype=compute_dtype, impl=dec.impl,
+                tb=tb or dec.tb, pc=pc or dec.pc,
+                ns_chunk=ns_chunk or dec.ns_chunk, interpret=interpret,
+            )
         G = G.at[b.item_ids].add(a * Gb, mode="drop")
         g = g.at[b.item_ids].add(a * gb, mode="drop")
     return G, g

@@ -40,6 +40,18 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--sweeps-per-block", type=int, default=8,
                    help="Gibbs sweeps per jitted device block (one host sync "
                         "per block; 1 = per-sweep dispatch, same samples)")
+    p.add_argument("--pipeline-blocks", type=int, default=1,
+                   help="block dispatch queue depth: launch the next device "
+                        "block before fetching the previous block's metrics "
+                        "(1 = synchronous; same samples at every depth)")
+    p.add_argument("--donate-blocks", default="auto",
+                   choices=["auto", "on", "off"],
+                   help="donate the block carry buffers to XLA so blocks "
+                        "reuse factor/accumulator memory (off = fallback "
+                        "path, fresh outputs every block)")
+    p.add_argument("--sync-checkpoint-writes", action="store_true",
+                   help="commit checkpoints synchronously instead of on the "
+                        "background writer thread")
     p.add_argument("--burn-in", type=int, default=8)
     p.add_argument("--seed", type=int, default=0, help="split + sampler seed")
     p.add_argument("--num-shards", type=int, default=0,
@@ -107,6 +119,9 @@ def main(argv: list[str] | None = None) -> int:
         alpha=args.alpha,
         num_sweeps=args.sweeps,
         sweeps_per_block=args.sweeps_per_block,
+        pipeline_blocks=args.pipeline_blocks,
+        donate_blocks=args.donate_blocks,
+        async_checkpoint_writes=not args.sync_checkpoint_writes,
         burn_in=args.burn_in,
         seed=args.seed,
         checkpoint_dir=args.checkpoint_dir,

@@ -383,3 +383,32 @@ def test_cold_cache_auto_on_cpu_is_xla(tmp_cache):
     fn = functools.partial(ops.bpmf_gram_step, alpha=2.0, gram_impl="auto")
     closed = jax.make_jaxpr(lambda G, g, X: fn(G, g, X, buckets))(G, g, X)
     assert _count_pallas_calls(closed.jaxpr) == 0
+
+
+def test_warm_bucket_cache_mixes_impls_within_step(tmp_cache):
+    """Per-bucket-class keys: with no step-key entry, a warmed bucket cache
+    routes each pad class independently — here the (16, 8) class through the
+    Pallas kernel while the (8, 32) class falls to the CPU heuristic (XLA) —
+    so ONE traced step mixes impls (exactly one pallas_call), and the mixed
+    step agrees numerically with the pure-XLA step."""
+    rng = np.random.default_rng(11)
+    Ns, K, cap = 64, 8, 40
+    X = jnp.asarray(rng.normal(size=(Ns, K)), jnp.float32)
+    buckets = (_bucket(rng, Ns, 16, 8, cap), _bucket(rng, Ns, 8, 32, cap))
+    G, g = _accs(rng, cap, K)
+    tmp_cache.record(
+        autotune.bucket_key(16, 8, Ns, K), autotune.Decision("pallas", 8, 128, None)
+    )
+    fn = functools.partial(ops.bpmf_gram_step, alpha=2.0, gram_impl="auto")
+    closed = jax.make_jaxpr(lambda G, g, X: fn(G, g, X, buckets))(G, g, X)
+    assert _count_pallas_calls(closed.jaxpr) == 1
+    Gm, gm = ops.bpmf_gram_step(G, g, X, buckets, alpha=2.0, gram_impl="auto")
+    Gx, gx = ops.bpmf_gram_step(G, g, X, buckets, alpha=2.0, gram_impl="xla")
+    np.testing.assert_allclose(np.asarray(Gm), np.asarray(Gx), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gx), rtol=1e-4, atol=1e-4)
+    # an exact *step*-key entry still pins the whole step, overriding the
+    # bucket entries — measured measure_step decisions keep their meaning
+    skey = autotune.step_key([(b.B, b.P) for b in buckets], Ns, K, cap, jnp.float32)
+    tmp_cache.record(skey, autotune.Decision("xla"))
+    closed = jax.make_jaxpr(lambda G, g, X: fn(G, g, X, buckets))(G, g, X)
+    assert _count_pallas_calls(closed.jaxpr) == 0

@@ -1,0 +1,272 @@
+"""Overlapped block pipeline + donated carries + async checkpoints (§13).
+
+The correctness bar of the overlap work: at any ``pipeline_blocks`` depth
+the engine dispatches the same jitted blocks in the same order on the same
+carries, so samples, metric history, checkpoint cadence and exported
+artifacts are **bitwise** equal to the synchronous depth-1 loop on every
+backend — including runs interrupted and resumed from a mid-pipeline
+checkpoint, runs with the donation fallback off, and user ``save()`` calls
+issued while blocks are still in flight. Async checkpoint writes must
+commit by process exit and never expose a torn checkpoint, even when the
+process dies before the writer thread drains.
+
+These tests run in-process on the tier-1 forced 8-device host mesh except
+the crash/exit tests, which need a fresh interpreter per scenario.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+from repro.serve import load_artifact
+
+ARRAY_KEYS = ("U_mean", "V_mean", "U_samples", "V_samples")
+BACKENDS = ("sequential", "ring", "ring_async", "allgather", "posterior_merge")
+
+
+def _cfg(**kw) -> BPMFConfig:
+    base = dict(
+        K=6, num_sweeps=7, burn_in=2, sweeps_per_block=2,
+        bucket_pads=(8, 32, 128), keep_factor_samples=3,
+    )
+    base.update(kw)
+    return BPMFConfig().replace(**base)
+
+
+def _coo(seed: int = 3):
+    return load_dataset(
+        "synthetic", num_users=90, num_movies=45, nnz=1000, noise_std=0.3, seed=seed
+    )
+
+
+def _artifact_equal(a, b, msg=""):
+    meta_a, arrs_a = a
+    meta_b, arrs_b = b
+    assert meta_a == meta_b, (msg, meta_a, meta_b)
+    for k in ARRAY_KEYS:
+        np.testing.assert_array_equal(arrs_a[k], arrs_b[k], err_msg=f"{msg}:{k}")
+
+
+# ---------- bitwise parity across pipeline depths ----------
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_pipeline_depths_bitwise_identical(tmp_path, name):
+    """pipeline_blocks ∈ {1, 2, 4}: factors, per-sweep history and the
+    exported artifact are bitwise identical on every backend — pipelining
+    only changes when block metrics reach the host, never the samples."""
+    coo = _coo()
+    outs = {}
+    for depth in (1, 2, 4):
+        e = BPMFEngine(_cfg(name=name, pipeline_blocks=depth)).fit(coo)
+        art = load_artifact(e.export(str(tmp_path / f"{name}-{depth}")))
+        outs[depth] = (e.factors(), [tuple(m) for m in e.history], art)
+    (U0, V0), hist0, art0 = outs[1]
+    assert [int(m[2]) for m in hist0] == list(range(1, 8))
+    for depth in (2, 4):
+        (U, V), hist, art = outs[depth]
+        np.testing.assert_array_equal(U, U0, err_msg=f"{name}@d{depth}")
+        np.testing.assert_array_equal(V, V0, err_msg=f"{name}@d{depth}")
+        assert hist == hist0, f"{name}@d{depth}: history diverged"
+        _artifact_equal(art, art0, msg=f"{name}@d{depth}")
+
+
+def test_donation_fallback_bitwise_identical():
+    """donate_blocks="off" routes through the non-donating jit variants and
+    draws the same samples — the fallback path is a pure perf toggle."""
+    coo = _coo(seed=5)
+    ref = BPMFEngine(_cfg(name="ring", pipeline_blocks=2)).fit(coo)
+    off = BPMFEngine(_cfg(name="ring", pipeline_blocks=2, donate_blocks="off")).fit(coo)
+    np.testing.assert_array_equal(ref.factors()[0], off.factors()[0])
+    np.testing.assert_array_equal(ref.factors()[1], off.factors()[1])
+    assert [tuple(m) for m in ref.history] == [tuple(m) for m in off.history]
+
+
+def test_pipeline_checkpoint_cadence_depth_invariant(tmp_path):
+    """``sample()`` still yields exactly one SweepMetrics per sweep in sweep
+    order, and ``checkpoint_every`` auto-saves land on the same steps, at
+    every depth — the dispatch queue drains at boundaries rather than
+    checkpointing a stale carry."""
+    coo = _coo(seed=6)
+    cadences = {}
+    for depth in (1, 2, 4):
+        cfg = _cfg(
+            pipeline_blocks=depth, num_sweeps=8, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path / f"d{depth}"), keep_checkpoints=99,
+        )
+        engine = BPMFEngine(cfg)
+        yielded = list(engine.sample(coo))
+        assert [int(m.sweep) for m in yielded] == list(range(1, 9))
+        assert yielded == engine.history
+        cadences[depth] = (engine._manager().all_steps(), [tuple(m) for m in yielded])
+    steps0, hist0 = cadences[1]
+    assert steps0 == [3, 6]  # 8 is not a checkpoint_every multiple
+    for depth, (steps, hist) in cadences.items():
+        assert steps == steps0, (depth, steps)
+        assert hist == hist0, f"depth={depth}: metrics diverged"
+
+
+# ---------- interruption / drain ----------
+
+
+def test_mid_pipeline_interruption_resumes_bitwise(tmp_path):
+    """Checkpoint mid-run at depth 2, restore in a fresh engine, finish:
+    samples, history and the exported artifact are bitwise identical to an
+    uninterrupted depth-2 run AND to the synchronous depth-1 run."""
+    coo = _coo(seed=5)
+    cfg = _cfg(
+        name="ring", num_sweeps=8, sweeps_per_block=3, pipeline_blocks=2,
+        checkpoint_every=4, checkpoint_dir=str(tmp_path / "ckpt"),
+    )
+
+    full = BPMFEngine(cfg).fit(coo)
+    full_art = load_artifact(full.export(str(tmp_path / "full")))
+    sync = BPMFEngine(
+        cfg.replace(pipeline_blocks=1, checkpoint_dir=None, checkpoint_every=0)
+    ).fit(coo)
+    np.testing.assert_array_equal(full.factors()[0], sync.factors()[0])
+
+    resumed = BPMFEngine(cfg)
+    assert resumed.restore(coo, step=4) == 4  # 4 % 3 != 0: mid-block sweep
+    resumed.fit()
+    res_art = load_artifact(resumed.export(str(tmp_path / "resumed")))
+    _artifact_equal(res_art, full_art, msg="mid-pipeline resume")
+    np.testing.assert_array_equal(resumed.factors()[0], full.factors()[0])
+    np.testing.assert_array_equal(resumed.factors()[1], full.factors()[1])
+    assert [tuple(m) for m in resumed.history] == [tuple(m) for m in full.history]
+
+
+def test_save_while_blocks_in_flight_drains(tmp_path):
+    """A user ``save()`` issued while the dispatch queue holds undrained
+    blocks is a pipeline barrier: it drains them all, checkpoints the
+    complete history, and the paused iterator still yields every remaining
+    sweep exactly once, in order."""
+    coo = _coo(seed=7)
+    cfg = _cfg(
+        num_sweeps=12, sweeps_per_block=2, pipeline_blocks=4,
+        checkpoint_dir=str(tmp_path / "ckpt"),
+    )
+    engine = BPMFEngine(cfg)
+    it = engine.sample(coo)
+    seen = [next(it) for _ in range(3)]
+    assert engine._inflight  # blocks genuinely in flight at the pause point
+    step = engine.save()
+    assert not engine._inflight
+    assert step == engine.num_sweeps_done == len(engine.history)
+    seen.extend(it)
+    assert [int(m.sweep) for m in seen] == list(range(1, 13))
+    assert seen == engine.history
+
+    ref = BPMFEngine(_cfg(num_sweeps=12, sweeps_per_block=2)).fit(coo)
+    assert [tuple(m) for m in engine.history] == [tuple(m) for m in ref.history]
+    np.testing.assert_array_equal(engine.factors()[0], ref.factors()[0])
+
+    restored = BPMFEngine(cfg)
+    assert restored.restore(coo) == step
+    assert [tuple(m) for m in restored.history] == [tuple(m) for m in engine.history[:step]]
+
+
+# ---------- async checkpoint writes: exit + crash semantics ----------
+
+
+@pytest.mark.multidevice
+def test_async_save_commits_by_process_exit(tmp_path):
+    """``save()`` returns before the filesystem commit; a process that then
+    exits normally still commits — the manager's atexit hook joins the
+    writer thread."""
+    ckpt = str(tmp_path / "ckpt")
+    run_with_devices(
+        f"""
+        from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+        coo = load_dataset("synthetic", num_users=60, num_movies=30, nnz=600, seed=1)
+        cfg = BPMFConfig().replace(
+            K=4, num_sweeps=4, burn_in=1, sweeps_per_block=2,
+            bucket_pads=(8, 32, 128), checkpoint_dir={ckpt!r},
+            async_checkpoint_writes=True,
+        )
+        engine = BPMFEngine(cfg).fit(coo)
+        engine.save()
+        # NO wait()/close(): the atexit drain must commit the pending write
+        """,
+        num_devices=2,
+    )
+    assert os.path.exists(os.path.join(ckpt, "LATEST"))
+    assert os.path.exists(os.path.join(ckpt, "step_00000004"))
+
+
+@pytest.mark.multidevice
+def test_crash_before_drain_never_exposes_torn_checkpoint(tmp_path):
+    """``os._exit`` right after async ``save()`` returns skips the atexit
+    drain and can kill the writer thread mid-write. Whatever survives must
+    be atomic: no committed step dir is torn, and if LATEST exists it
+    restores fully in a fresh process."""
+    ckpt = str(tmp_path / "ckpt")
+    run_with_devices(
+        f"""
+        import os
+        from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+        coo = load_dataset("synthetic", num_users=60, num_movies=30, nnz=600, seed=1)
+        cfg = BPMFConfig().replace(
+            K=4, num_sweeps=4, burn_in=1, sweeps_per_block=2,
+            bucket_pads=(8, 32, 128), checkpoint_dir={ckpt!r},
+            async_checkpoint_writes=True,
+        )
+        engine = BPMFEngine(cfg).fit(coo)
+        engine.save()
+        os._exit(0)  # crash before the background write necessarily drains
+        """,
+        num_devices=2,
+    )
+    # both outcomes are legal: nothing committed, or a complete checkpoint.
+    # what is ILLEGAL is a partial commit — a visible step dir or LATEST
+    # that a fresh process cannot restore.
+    run_with_devices(
+        f"""
+        import os
+        from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+        coo = load_dataset("synthetic", num_users=60, num_movies=30, nnz=600, seed=1)
+        cfg = BPMFConfig().replace(
+            K=4, num_sweeps=4, burn_in=1, sweeps_per_block=2,
+            bucket_pads=(8, 32, 128), checkpoint_dir={ckpt!r},
+        )
+        steps = [n for n in os.listdir({ckpt!r})
+                 if n.startswith("step_") and ".tmp" not in n]
+        if os.path.exists(os.path.join({ckpt!r}, "LATEST")):
+            engine = BPMFEngine(cfg)
+            engine.prepare(coo)
+            assert engine.restore() == 4, "LATEST points at a torn checkpoint"
+            print("RESTORED")
+        else:
+            assert not steps, f"committed steps without LATEST: {{steps}}"
+            print("NOTHING_COMMITTED")
+        """,
+        num_devices=2,
+    )
+
+
+# ---------- config / plumbing ----------
+
+
+def test_pipeline_blocks_validated():
+    with pytest.raises(ValueError, match="pipeline_blocks"):
+        _cfg(pipeline_blocks=0)
+
+
+def test_donate_blocks_validated():
+    with pytest.raises(ValueError, match="donate_blocks"):
+        _cfg(donate_blocks="bogus")
+
+
+def test_pipeline_metrics_single_transfer_and_blocked_time():
+    """Pipelining keeps the one-[block,3]-f32-fetch-per-block contract (12
+    bytes/sweep at any depth) and accounts the host-blocked drain time it
+    is meant to shrink."""
+    coo = _coo(seed=2)
+    for depth in (1, 4):
+        engine = BPMFEngine(_cfg(pipeline_blocks=depth, num_sweeps=6)).fit(coo)
+        assert engine.host_metric_bytes == 6 * 3 * 4
+        assert engine.host_blocked_s >= 0.0
