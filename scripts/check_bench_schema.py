@@ -29,7 +29,8 @@ IMPLS = ("pallas_fused", "pallas", "xla")
 
 # benchmarks whose payloads always carry a "smoke" flag: their committed
 # JSON must define it (and, like every committed file, have it false)
-SMOKE_STAMPED = ("serve_latency", "serve_load", "sweep_throughput", "fig_merge_comm")
+SMOKE_STAMPED = ("serve_latency", "serve_load", "sweep_throughput", "fig_merge_comm",
+                 "fig4_scaling")
 
 
 def check_fig2_item_update(payload: dict) -> list[str]:
@@ -248,6 +249,82 @@ def check_fig_merge_comm(payload: dict) -> list[str]:
     return errs
 
 
+def check_fig4_scaling(payload: dict) -> list[str]:
+    """Schema of fig4_scaling.json (width sweep + process-count sweep)."""
+    errs: list[str] = []
+    widths = payload.get("widths")
+    if not isinstance(widths, list) or not widths or any(
+        not isinstance(w, int) or w < 1 for w in widths
+    ):
+        errs.append("widths: needs a list of positive ints")
+    modes = payload.get("modes")
+    if not isinstance(modes, dict) or not {"ring", "allgather"} <= set(modes):
+        errs.append("modes: needs ring and allgather entries")
+    else:
+        for mode, rows in modes.items():
+            if not isinstance(rows, list) or not rows:
+                errs.append(f"modes[{mode}]: missing or empty")
+                continue
+            for i, r in enumerate(rows):
+                for k in ("devices", "seconds", "updates_per_s", "speedup"):
+                    if not isinstance(r.get(k), (int, float)) or r.get(k, 0) <= 0:
+                        errs.append(f"modes[{mode}][{i}].{k}: missing or non-positive")
+    ps = payload.get("process_sweep")
+    if not isinstance(ps, dict):
+        errs.append("process_sweep: missing")
+        return errs
+    S = ps.get("global_devices")
+    if not isinstance(S, int) or S < 1:
+        errs.append("process_sweep.global_devices: missing or < 1")
+    rb = ps.get("ring_bytes_per_sweep")
+    if not isinstance(rb, dict) or any(
+        not isinstance(rb.get(k), int) or rb.get(k, 0) <= 0
+        for k in ("modelled", "measured", "cap_u", "cap_v")
+    ):
+        errs.append("process_sweep.ring_bytes_per_sweep: needs positive int "
+                    "modelled/measured/cap_u/cap_v")
+    elif rb.get("model_matches") is not True:
+        errs.append(
+            "process_sweep.ring_bytes_per_sweep.model_matches: False — "
+            f"modelled {rb['modelled']} != traced {rb['measured']}"
+        )
+    layouts = ps.get("layouts")
+    if not isinstance(layouts, list) or not layouts:
+        errs.append("process_sweep.layouts: missing or empty")
+        return errs
+    seen_multi = False
+    for i, r in enumerate(layouts):
+        where = f"process_sweep.layouts[{i}]"
+        for k in ("processes", "devices_per_process"):
+            if not isinstance(r.get(k), int) or r.get(k, 0) < 1:
+                errs.append(f"{where}.{k}: missing or < 1")
+        if (
+            isinstance(S, int)
+            and isinstance(r.get("processes"), int)
+            and isinstance(r.get("devices_per_process"), int)
+            and r["processes"] * r["devices_per_process"] != S
+        ):
+            errs.append(f"{where}: processes x devices_per_process != "
+                        f"global_devices ({S})")
+        for k in ("seconds", "sweeps_per_s"):
+            if not isinstance(r.get(k), (int, float)) or r.get(k, 0) <= 0:
+                errs.append(f"{where}.{k}: missing or non-positive")
+        cross = r.get("cross_process_bytes_per_sweep")
+        if not isinstance(cross, int) or cross < 0:
+            errs.append(f"{where}.cross_process_bytes_per_sweep: missing or negative")
+        elif r.get("processes") == 1 and cross != 0:
+            errs.append(f"{where}: single-process layout must report 0 "
+                        "cross-process bytes")
+        elif isinstance(r.get("processes"), int) and r["processes"] > 1:
+            seen_multi = True
+            if cross == 0:
+                errs.append(f"{where}: multi-process layout reports 0 "
+                            "cross-process bytes")
+    if not seen_multi:
+        errs.append("process_sweep.layouts: needs at least one multi-process layout")
+    return errs
+
+
 def check_serve_load(payload: dict) -> list[str]:
     """Schema of serve_load.json (closed-loop server load benchmark)."""
     errs: list[str] = []
@@ -295,6 +372,7 @@ def check_serve_load(payload: dict) -> list[str]:
 
 CHECKERS = {
     "fig2_item_update": check_fig2_item_update,
+    "fig4_scaling": check_fig4_scaling,
     "fig5_overlap": check_fig5_overlap,
     "fig_merge_comm": check_fig_merge_comm,
     "serve_latency": check_serve_latency,

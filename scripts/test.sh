@@ -34,6 +34,11 @@
 #                                       #   export; sweep_throughput --smoke
 #                                       #   (overlap + save-latency columns)
 #                                       #   + JSON schema check
+#   scripts/test.sh --multiproc-smoke   # + 2-process gang (DESIGN.md §14):
+#                                       #   ring run -> checkpoint -> restart
+#                                       #   at 1 process -> export -> serve
+#                                       #   one-shot; fig4_scaling --smoke
+#                                       #   + JSON schema check
 #
 # Benchmark smoke runs write to temp --out paths (never the committed
 # experiments/bench JSONs); each stanza schema-checks its temp output via
@@ -57,6 +62,7 @@ BLOCK_SMOKE=0
 SERVER_SMOKE=0
 MERGE_SMOKE=0
 OVERLAP_SMOKE=0
+MULTIPROC_SMOKE=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then
@@ -73,6 +79,8 @@ for a in "$@"; do
     MERGE_SMOKE=1
   elif [[ "$a" == "--overlap-smoke" ]]; then
     OVERLAP_SMOKE=1
+  elif [[ "$a" == "--multiproc-smoke" ]]; then
+    MULTIPROC_SMOKE=1
   else
     ARGS+=("$a")
   fi
@@ -290,6 +298,32 @@ if [[ "$OVERLAP_SMOKE" == 1 ]]; then
   python scripts/check_bench_schema.py sweep_throughput --path "$OV_TMP/sweep_throughput.json"
   python scripts/check_bench_schema.py sweep_throughput
   rm -rf "$OV_TMP"
+fi
+
+if [[ "$MULTIPROC_SMOKE" == 1 ]]; then
+  echo "== multiproc smoke: 2-process ring gang -> ckpt -> 1-process restart -> serve =="
+  MP_TMP="$(mktemp -d)"
+  MPART="$MP_TMP/artifact"
+  python scripts/launch_multiproc.py \
+    --num-processes 2 --devices-per-process 4 --timeout 600 -- \
+    --backend ring --dataset synthetic --sweeps 4 --sweeps-per-block 2 \
+    --burn-in 2 --K 4 --users 80 --movies 40 --nnz 800 \
+    --checkpoint-dir "$MP_TMP/ckpt" --checkpoint-every 2
+  test -d "$MP_TMP/ckpt/step_00000004"
+  # restart the same checkpoint at a different process count (same global
+  # device total) and continue to the end, then export and serve
+  python scripts/launch_multiproc.py \
+    --num-processes 1 --devices-per-process 8 --timeout 600 -- \
+    --backend ring --dataset synthetic --sweeps 8 --sweeps-per-block 2 \
+    --burn-in 2 --K 4 --users 80 --movies 40 --nnz 800 \
+    --checkpoint-dir "$MP_TMP/ckpt" --resume \
+    --export-artifact "$MPART"
+  python -m repro.launch.serve --artifact "$MPART" --rows 0,1,2 --cols 0,1,2
+  echo "== fig4_scaling smoke + schema check =="
+  python -m benchmarks.fig4_scaling --smoke --out "$MP_TMP/fig4_scaling.json"
+  python scripts/check_bench_schema.py fig4_scaling --path "$MP_TMP/fig4_scaling.json"
+  python scripts/check_bench_schema.py fig4_scaling
+  rm -rf "$MP_TMP"
 fi
 
 exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

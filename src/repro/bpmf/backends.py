@@ -30,6 +30,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.bpmf.config import BPMFConfig
+from repro.checkpoint import ShardedHostLeaf
 from repro.core import distributed as dist
 from repro.core import gibbs
 from repro.core import subset_merge
@@ -38,6 +39,7 @@ from repro.core.prediction import PredictionState
 from repro.core.subset_merge import MergeAccum
 from repro.core.types import BPMFState, HyperParams, PosteriorAccum
 from repro.data.sparse import (
+    ChunkedRatings,
     RatingsCOO,
     build_bpmf_data,
     build_bpmf_data_presplit,
@@ -89,14 +91,16 @@ def accum_host_tree(
     if count == 0:
         U_sum, V_sum = _EMPTY_SUM, _EMPTY_SUM
     else:
-        U_sum = np.asarray(accum.U_sum)
-        V_sum = np.asarray(accum.V_sum)
+        # fetch_global: a collective host gather when the accumulator is
+        # sharded across processes (every process calls accum_host together)
+        U_sum = dist.fetch_global(accum.U_sum)
+        V_sum = dist.fetch_global(accum.V_sum)
         if u_order is not None:
             U_sum, V_sum = U_sum[u_order], V_sum[v_order]
     slots = _window_slots(count, keep, int(accum.filled))
     if slots.size:
-        Us = np.asarray(accum.U_window)[slots]
-        Vs = np.asarray(accum.V_window)[slots]
+        Us = dist.fetch_global(accum.U_window)[slots]
+        Vs = dist.fetch_global(accum.V_window)[slots]
         if u_order is not None:
             Us, Vs = Us[:, u_order], Vs[:, v_order]
     else:
@@ -393,7 +397,9 @@ class Backend(abc.ABC):
 class SequentialBackend(Backend):
     """Single-program Algorithm 1 via :mod:`repro.core.gibbs`."""
 
-    def prepare(self, coo: RatingsCOO) -> None:
+    def prepare(self, coo: RatingsCOO | ChunkedRatings) -> None:
+        if isinstance(coo, ChunkedRatings):  # no per-host path: concatenate
+            coo = coo.materialize()
         self.data = build_bpmf_data(
             coo,
             pads=self.cfg.backend.bucket_pads,
@@ -467,8 +473,9 @@ class DistributedBackend(Backend):
     ``BackendConfig.name`` or override :meth:`sweep`.
     """
 
-    def prepare(self, coo: RatingsCOO) -> None:
+    def prepare(self, coo: RatingsCOO | ChunkedRatings) -> None:
         devices = jax.devices()
+        procs = jax.process_count()
         S = self.cfg.backend.num_shards or len(devices)
         if S > len(devices):
             raise ValueError(
@@ -476,15 +483,37 @@ class DistributedBackend(Backend):
                 f"device(s); lower it or force more host devices "
                 f"(XLA_FLAGS=--xla_force_host_platform_device_count=N)"
             )
+        if procs > 1 and S != len(devices):
+            raise ValueError(
+                f"multi-process runs must ring all {len(devices)} global "
+                f"devices (got num_shards={S}); vary --devices per process "
+                f"instead"
+            )
         self.mesh = dist.make_ring_mesh(devices[:S])
-        data, self.plan = dist.build_distributed_data(
-            coo,
-            num_shards=S,
-            pads=self.cfg.backend.bucket_pads,
-            test_fraction=self.cfg.run.test_fraction,
-            seed=self.cfg.run.seed,
-            strategy=self.cfg.backend.partition_strategy,
-        )
+        if procs > 1 or isinstance(coo, ChunkedRatings):
+            # per-host loading (DESIGN.md §14): every process computes the
+            # same global plan from the shared chunk stream but materializes
+            # only its own shards' buckets/rating rows
+            chunked = coo if isinstance(coo, ChunkedRatings) else coo.chunked()
+            local = dist.local_shard_range(S, jax.process_index(), procs)
+            data, self.plan = dist.build_distributed_data_per_host(
+                chunked,
+                num_shards=S,
+                local_shards=local,
+                pads=self.cfg.backend.bucket_pads,
+                test_fraction=self.cfg.run.test_fraction,
+                seed=self.cfg.run.seed,
+                strategy=self.cfg.backend.partition_strategy,
+            )
+        else:
+            data, self.plan = dist.build_distributed_data(
+                coo,
+                num_shards=S,
+                pads=self.cfg.backend.bucket_pads,
+                test_fraction=self.cfg.run.test_fraction,
+                seed=self.cfg.run.seed,
+                strategy=self.cfg.backend.partition_strategy,
+            )
         self.data = dist.shard_data(data, self.mesh)
         self.num_shards = S
         self._prepared = True
@@ -532,7 +561,7 @@ class DistributedBackend(Backend):
         )
         specs = dist.accum_specs()
         return jax.tree_util.tree_map(
-            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)), host, specs
+            lambda x, s: dist.place_global(x, NamedSharding(self.mesh, s)), host, specs
         )
 
     @property
@@ -600,15 +629,30 @@ class PosteriorMergeBackend(Backend):
     stream ``fold_in(run_key, c)``, and user-factor rows are initialized by
     *original* user id, so the per-chain init matches the sequential
     backend's rows for the same seed.
+
+    Multi-process (DESIGN.md §14): chains are placed round-robin over the
+    *global* device list, so the first multi-host tenant costs only
+    placement. Each process builds device data and runs the sweep loop for
+    its own chains alone; a chain owned by another process travels through
+    this process's pytrees as zero-shard :class:`ShardedHostLeaf`
+    placeholders — structurally identical trees on every process, so the
+    checkpoint commit protocol sees one global leaf set with each chain's
+    bytes written by its owner. Per-sweep metrics and the export-time merge
+    gather chain summaries with a zero-filled host allgather (each chain's
+    slot filled only by its owner), and the merged artifact is written by
+    process 0.
     """
 
     # approximate inference: merged posterior != sequential samples; gated
     # by the statistical harness (tests/test_posterior_quality.py)
     exact_parity = False
 
-    def prepare(self, coo: RatingsCOO) -> None:
+    def prepare(self, coo: RatingsCOO | ChunkedRatings) -> None:
+        if isinstance(coo, ChunkedRatings):  # chains split users, not shards
+            coo = coo.materialize()
         bk = self.cfg.backend
-        P = bk.num_partitions or min(len(jax.devices()), coo.num_users)
+        devices = jax.devices()  # global, process-major
+        P = bk.num_partitions or min(len(devices), coo.num_users)
         self.user_sets = subset_merge.partition_users(
             coo, P, strategy=bk.partition_strategy
         )
@@ -621,10 +665,20 @@ class PosteriorMergeBackend(Backend):
         self._range = (float(coo.vals.min()), float(coo.vals.max()))
         train_subs = subset_merge.split_by_users(train, self.user_sets)
         test_subs = subset_merge.split_by_users(test, self.user_sets)
-        devices = jax.devices()
         self.devices = [devices[c % len(devices)] for c in range(P)]
-        self.chain_data = []
-        for c in range(P):
+        self._owner = [int(d.process_index) for d in self.devices]
+        self._test_counts = [int(t.nnz) for t in test_subs]
+        self._test_vals = (
+            np.concatenate([np.asarray(t.vals, np.float32) for t in test_subs])
+            if test_subs
+            else np.zeros(0, np.float32)
+        )
+        pid = jax.process_index()
+        self._local_chains = [c for c in range(P) if self._owner[c] == pid]
+        # per-host loading: only this process's chains get bucketed device
+        # data; foreign chains stay host-side split metadata
+        self.chain_data = {}
+        for c in self._local_chains:
             data = build_bpmf_data_presplit(
                 subset_merge.localize_users(train_subs[c], self.user_sets[c]),
                 subset_merge.localize_users(test_subs[c], self.user_sets[c]),
@@ -633,7 +687,7 @@ class PosteriorMergeBackend(Backend):
                 min_rating=self._range[0],
                 max_rating=self._range[1],
             )
-            self.chain_data.append(jax.device_put(data, self.devices[c]))
+            self.chain_data[c] = jax.device_put(data, self.devices[c])
         self.num_partitions = P
         self._num_users = coo.num_users
         self._num_movies = coo.num_movies
@@ -644,6 +698,70 @@ class PosteriorMergeBackend(Backend):
         """Checkpoint subtree key of chain ``c`` (zero-padded, stable order)."""
         return f"chain_{c:03d}"
 
+    # ------------------------------------------------------------------
+    # cross-process plumbing (no-ops on a single process)
+    # ------------------------------------------------------------------
+    def _to_chain_device(self, tree, c: int):
+        """Commit a host pytree to chain ``c``'s device.
+
+        Local chains ``device_put`` as always; a chain owned by another
+        process becomes a pytree of zero-shard :class:`ShardedHostLeaf`
+        placeholders (global shape/dtype, no data) — never computed on
+        here, but keeping every process's trees structurally identical for
+        the checkpoint layer.
+        """
+        if self._owner[c] == jax.process_index():
+            return jax.device_put(tree, self.devices[c])
+        return jax.tree_util.tree_map(
+            lambda a: ShardedHostLeaf(
+                global_shape=tuple(int(d) for d in np.shape(a)),
+                dtype=str(np.result_type(a)),
+                shards=(),
+            ),
+            tree,
+        )
+
+    def _fetch(self, x, c: int) -> np.ndarray:
+        """Host copy of chain ``c``'s array, on every process.
+
+        A collective in multi-process jobs (all processes must call it in
+        the same order): every process contributes a zero-filled slot
+        except the owner, the slots are allgathered, and the owner's is
+        selected — bitwise the owner's bytes, everywhere.
+        """
+        if jax.process_count() == 1:
+            return np.asarray(jax.device_get(x))
+        from jax.experimental import multihost_utils
+
+        if isinstance(x, ShardedHostLeaf):
+            local = np.zeros(x.global_shape, np.dtype(x.dtype))
+        else:
+            local = np.asarray(jax.device_get(x))
+        gathered = multihost_utils.process_allgather(local)
+        return np.asarray(gathered[self._owner[c]], local.dtype)
+
+    def _host_accum(self, c: int, a) -> PosteriorAccum:
+        """Chain ``c``'s accumulator as host numpy (collective, see
+        :meth:`_fetch`)."""
+        return PosteriorAccum(
+            U_sum=self._fetch(a.U_sum, c),
+            V_sum=self._fetch(a.V_sum, c),
+            count=self._fetch(a.count, c),
+            filled=self._fetch(a.filled, c),
+            U_window=self._fetch(a.U_window, c),
+            V_window=self._fetch(a.V_window, c),
+        )
+
+    def _global_rows(self, per_chain: np.ndarray) -> np.ndarray:
+        """Sum each chain's metric rows over processes (owner contributes
+        the values, everyone else zeros)."""
+        if jax.process_count() == 1:
+            return per_chain
+        from jax.experimental import multihost_utils
+
+        return np.asarray(multihost_utils.process_allgather(per_chain)).sum(axis=0)
+
+    # ------------------------------------------------------------------
     def init_state(self, key: jax.Array):
         """Per-chain prior-predictive states; U rows keyed by *original*
         user id (bitwise the sequential init's rows), V identical across
@@ -652,17 +770,17 @@ class PosteriorMergeBackend(Backend):
         K = self.core_cfg.K
         ku, kv = jax.random.split(key)
         states = []
-        for c, (data, uids) in enumerate(zip(self.chain_data, self.user_sets)):
+        for c, uids in enumerate(self.user_sets):
             st = BPMFState(
                 U=gibbs.init_rows(ku, jnp.asarray(uids, jnp.int32), K, dt),
                 V=gibbs.init_rows(
-                    kv, jnp.arange(data.num_movies, dtype=jnp.int32), K, dt
+                    kv, jnp.arange(self._num_movies, dtype=jnp.int32), K, dt
                 ),
                 hyper_U=HyperParams.init(K, dt),
                 hyper_V=HyperParams.init(K, dt),
                 sweep=jnp.zeros((), jnp.int32),
             )
-            states.append(jax.device_put(st, self.devices[c]))
+            states.append(self._to_chain_device(st, c))
         return tuple(states)
 
     def _combine_metric_rows(self, per_chain: np.ndarray) -> np.ndarray:
@@ -674,9 +792,7 @@ class PosteriorMergeBackend(Backend):
         subset report NaN and are zero-weighted. The sweep column is shared
         (chains run in lock-step).
         """
-        T = np.asarray(
-            [int(d.test.rows.shape[0]) for d in self.chain_data], np.float64
-        )
+        T = np.asarray(self._test_counts, np.float64)
         total = max(T.sum(), 1.0)
         sq = np.square(np.nan_to_num(per_chain[:, :, :2].astype(np.float64)))
         comb = np.sqrt((T[:, None, None] * sq).sum(axis=0) / total)
@@ -684,28 +800,28 @@ class PosteriorMergeBackend(Backend):
         return rows.astype(np.float32)
 
     def sweep(self, key: jax.Array, state, pred):
-        outs = [
-            gibbs.gibbs_sweep(
+        outs = {
+            c: gibbs.gibbs_sweep(
                 subset_merge.chain_key(key, c), state[c], pred[c],
                 self.chain_data[c], self.core_cfg,
             )
-            for c in range(self.num_partitions)
-        ]
-        per_chain = np.stack(
-            [
-                np.asarray(
-                    jax.device_get(
-                        jnp.stack(
-                            [m.rmse_sample, m.rmse_avg, m.sweep.astype(jnp.float32)]
-                        )
-                    )
+            for c in self._local_chains
+        }
+        per_chain = np.zeros((self.num_partitions, 1, 3), np.float32)
+        for c, (_, _, m) in outs.items():
+            per_chain[c, 0] = np.asarray(
+                jax.device_get(
+                    jnp.stack([m.rmse_sample, m.rmse_avg, m.sweep.astype(jnp.float32)])
                 )
-                for _, _, m in outs
-            ]
-        )[:, None, :]
-        row = self._combine_metric_rows(per_chain)[0]
+            )
+        row = self._combine_metric_rows(self._global_rows(per_chain))[0]
         metrics = SweepMetrics(float(row[0]), float(row[1]), float(row[2]))
-        return tuple(o[0] for o in outs), tuple(o[1] for o in outs), metrics
+        C = self.num_partitions
+        return (
+            tuple(outs[c][0] if c in outs else state[c] for c in range(C)),
+            tuple(outs[c][1] if c in outs else pred[c] for c in range(C)),
+            metrics,
+        )
 
     def sweep_block(
         self, key: jax.Array, state, pred, accum: MergeAccum, block_size: int
@@ -715,21 +831,27 @@ class PosteriorMergeBackend(Backend):
             if self.donate_blocks
             else gibbs.gibbs_sweep_block
         )
-        outs = []
-        for c in range(self.num_partitions):
-            outs.append(
-                fn(
-                    subset_merge.chain_key(key, c), state[c], pred[c],
-                    accum.chains[c], self.chain_data[c], self.core_cfg, block_size,
-                )
+        outs = {}
+        for c in self._local_chains:
+            outs[c] = fn(
+                subset_merge.chain_key(key, c), state[c], pred[c],
+                accum.chains[c], self.chain_data[c], self.core_cfg, block_size,
             )
-        # all chain blocks are dispatched (async) before the first fetch
-        per_chain = np.stack([np.asarray(jax.device_get(o[3])) for o in outs])
-        metrics = self._combine_metric_rows(per_chain)
+        # all local chain blocks are dispatched (async) before the first
+        # fetch; foreign chains' rows arrive through the allgather below
+        per_chain = np.zeros((self.num_partitions, block_size, 3), np.float32)
+        for c, o in outs.items():
+            per_chain[c] = np.asarray(jax.device_get(o[3]))
+        metrics = self._combine_metric_rows(self._global_rows(per_chain))
+        C = self.num_partitions
         return (
-            tuple(o[0] for o in outs),
-            tuple(o[1] for o in outs),
-            MergeAccum(chains=tuple(o[2] for o in outs)),
+            tuple(outs[c][0] if c in outs else state[c] for c in range(C)),
+            tuple(outs[c][1] if c in outs else pred[c] for c in range(C)),
+            MergeAccum(
+                chains=tuple(
+                    outs[c][2] if c in outs else accum.chains[c] for c in range(C)
+                )
+            ),
             metrics,
         )
 
@@ -739,32 +861,32 @@ class PosteriorMergeBackend(Backend):
         of the chains' current draws."""
         K = self.core_cfg.K
         U = np.zeros((self._num_users, K), np.float32)
-        for st, uids in zip(state, self.user_sets):
-            U[uids] = np.asarray(st.U, np.float32)
-        V = np.mean(
-            np.stack([np.asarray(st.V, np.float32) for st in state]), axis=0
-        ).astype(np.float32)
+        Vs = []
+        for c, uids in enumerate(self.user_sets):
+            U[uids] = np.asarray(self._fetch(state[c].U, c), np.float32)
+            Vs.append(np.asarray(self._fetch(state[c].V, c), np.float32))
+        V = np.mean(np.stack(Vs), axis=0).astype(np.float32)
         return U, V
 
     def init_accum(self) -> MergeAccum:
         keep = self.cfg.run.keep_factor_samples
         K = self.core_cfg.K
         chains = []
-        for c, data in enumerate(self.chain_data):
-            a = PosteriorAccum.init(data.num_users, data.num_movies, K, keep)
-            chains.append(jax.device_put(a, self.devices[c]))
+        for c, uids in enumerate(self.user_sets):
+            a = PosteriorAccum.init(len(uids), self._num_movies, K, keep)
+            chains.append(self._to_chain_device(a, c))
         return MergeAccum(chains=tuple(chains))
 
     def init_pred(self):
         """Per-chain prediction accumulators, one per chain test subset."""
         return tuple(
-            jax.device_put(PredictionState.init(int(d.test.rows.shape[0])), dev)
-            for d, dev in zip(self.chain_data, self.devices)
+            self._to_chain_device(PredictionState.init(self._test_counts[c]), c)
+            for c in range(self.num_partitions)
         )
 
     def accum_host(self, accum: MergeAccum) -> dict:
         return {
-            self._chain_name(c): accum_host_tree(a)
+            self._chain_name(c): accum_host_tree(self._host_accum(c, a))
             for c, a in enumerate(accum.chains)
         }
 
@@ -772,10 +894,10 @@ class PosteriorMergeBackend(Backend):
         keep = self.cfg.run.keep_factor_samples
         K = self.core_cfg.K
         chains = []
-        for c, data in enumerate(self.chain_data):
-            template = PosteriorAccum.init(data.num_users, data.num_movies, K, keep)
+        for c, uids in enumerate(self.user_sets):
+            template = PosteriorAccum.init(len(uids), self._num_movies, K, keep)
             host = accum_from_host_tree(tree[self._chain_name(c)], template)
-            chains.append(jax.device_put(host, self.devices[c]))
+            chains.append(self._to_chain_device(host, c))
         return MergeAccum(chains=tuple(chains))
 
     def posterior_template(self) -> dict:
@@ -786,9 +908,12 @@ class PosteriorMergeBackend(Backend):
 
     def posterior_export(self, accum: MergeAccum) -> dict:
         """The backend's single communication event: gather each chain's
-        accumulator and merge the subset posteriors
-        (:func:`repro.core.subset_merge.merge_chain_trees`)."""
-        trees = [accum_host_tree(a) for a in accum.chains]
+        accumulator (collective across processes) and merge the subset
+        posteriors (:func:`repro.core.subset_merge.merge_chain_trees`)."""
+        trees = [
+            accum_host_tree(self._host_accum(c, a))
+            for c, a in enumerate(accum.chains)
+        ]
         return subset_merge.merge_chain_trees(
             trees,
             self.user_sets,
@@ -798,15 +923,11 @@ class PosteriorMergeBackend(Backend):
 
     @property
     def num_test(self) -> int:
-        return sum(int(d.test.rows.shape[0]) for d in self.chain_data)
+        return sum(self._test_counts)
 
     @property
     def test_vals(self) -> jax.Array:
-        return jnp.asarray(
-            np.concatenate(
-                [np.asarray(d.test.vals, np.float32) for d in self.chain_data]
-            )
-        )
+        return jnp.asarray(self._test_vals)
 
     @property
     def mean_rating(self) -> float:

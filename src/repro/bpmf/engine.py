@@ -421,6 +421,16 @@ class BPMFEngine:
         if self._ckpt is not None:
             self._ckpt.wait()
         meta, arrays = self._artifact_payload()
+        if jax.process_count() > 1:
+            # the payload gathers are collective (every process runs them);
+            # the filesystem write is process 0's alone, and the barrier
+            # keeps peers from racing ahead to read a half-written artifact
+            from jax.experimental import multihost_utils
+
+            if jax.process_index() == 0:
+                save_artifact(directory, meta, arrays)
+            multihost_utils.sync_global_devices(f"artifact-export-{directory}")
+            return directory
         return save_artifact(directory, meta, arrays)
 
     # ------------------------------------------------------------------

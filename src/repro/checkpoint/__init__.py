@@ -2,6 +2,8 @@ from repro.checkpoint.checkpoint import (
     CheckpointCorruptError,
     CheckpointError,
     CheckpointSchemaError,
+    ShardedHostLeaf,
+    host_snapshot_leaf,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
@@ -12,6 +14,8 @@ __all__ = [
     "CheckpointCorruptError",
     "CheckpointError",
     "CheckpointSchemaError",
+    "ShardedHostLeaf",
+    "host_snapshot_leaf",
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",

@@ -8,21 +8,29 @@ Layout (one directory per step)::
     <dir>/step_000100/                 # atomic rename on commit
     <dir>/LATEST                      # text file: committed step number
 
-Multi-host posture: each leaf is written via
-``jax.experimental.multihost_utils``-free addressable-shard gathering — on a
-real multi-host cluster each process writes only the shards it owns into
-per-process files. On this single-process container that degenerates to one
-file per leaf, but the read path already accepts *any* target sharding, so a
-checkpoint written on one mesh restores onto a different mesh/device-count
-(elastic restore — exercised by tests/test_checkpoint.py and
-runtime/elastic.py).
+Multi-process posture (DESIGN.md §14): a leaf that is sharded across
+processes is written as per-shard files — each process saves only the
+shards it can address, with the shard's global index range encoded in the
+file name (``<leaf>.shard-<start>_<stop>[-...].npy``) and ``"sharded":
+true`` recorded in the manifest. All processes stage into one
+*deterministic* tmp directory on the shared checkpoint filesystem
+(``step_N.tmp-mp`` — the single-process nonce would scatter the shards
+across directories), a global device barrier confirms every shard file is
+on disk, and then **process 0 alone** writes the manifest, renames the tmp
+directory into place and swaps ``LATEST`` — the commit protocol. The read
+path reassembles the global array from the shard files and places it under
+the *target's* sharding, so a checkpoint written at one process count
+restores at any other (resharding), including back to a single process.
+On a single process all of this degenerates to exactly the old one-file-
+per-leaf format, so existing checkpoints interoperate both ways.
 
-Atomicity: the ``.tmp-<nonce>`` directory is renamed to its final name only
-after every leaf + manifest hit disk, and ``LATEST`` is updated after the
-rename, so a killed process never leaves a half-readable "latest" checkpoint.
+Atomicity: the tmp directory is renamed to its final name only after every
+leaf + manifest hit disk, and ``LATEST`` is updated after the rename, so a
+killed process never leaves a half-readable "latest" checkpoint.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import secrets
@@ -64,6 +72,86 @@ class CheckpointSchemaError(CheckpointError, ValueError):
     """
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedHostLeaf:
+    """Host snapshot of one process's view of a cross-process jax array.
+
+    Holds only the shards this process can address (as numpy blocks keyed by
+    their global ``(start, stop)`` index ranges) plus the global shape/dtype
+    — what :func:`save_checkpoint` needs to write this process's shard files
+    and what process 0 needs for the manifest entry. Produced by
+    :func:`host_snapshot_leaf`; opaque to ``jax.tree`` (no pytree
+    registration), so it travels through checkpoint trees as a leaf.
+    """
+
+    global_shape: tuple[int, ...]
+    dtype: str
+    #: ``(((start, stop), ...per dim), block)`` per distinct addressable shard
+    shards: tuple[tuple[tuple[tuple[int, int], ...], np.ndarray], ...]
+
+
+def _shard_ranges(shape: tuple[int, ...], index) -> tuple[tuple[int, int], ...]:
+    """Resolve a shard's ``.index`` (slices) into per-dim (start, stop)."""
+    out = []
+    for dim, sl in zip(shape, index):
+        start, stop, step = sl.indices(dim)
+        if step != 1:  # pragma: no cover - jax shardings are contiguous
+            raise ValueError(f"non-contiguous shard slice {sl}")
+        out.append((int(start), int(stop)))
+    return tuple(out)
+
+
+def host_snapshot_leaf(x: Any) -> Any:
+    """Snapshot one checkpoint leaf to host form, multi-process aware.
+
+    Single process: plain ``device_get`` numpy arrays, exactly as before.
+    Multi-process: *every* jax array becomes a :class:`ShardedHostLeaf` of
+    this process's addressable shards — the only part it can snapshot
+    locally. The rule is uniform on purpose: a ring-sharded factor yields
+    one row-range shard per process; a replicated array yields identical
+    full-range shards from every process (the writers race to the same
+    bytes); a single-device array (a ``posterior_merge`` chain) yields one
+    full-range shard from its owner and nothing elsewhere — its peers hold
+    non-addressable placeholders and stay silent. Plain host (numpy) leaves
+    pass through and are written by process 0 alone.
+    """
+    if isinstance(x, ShardedHostLeaf):
+        return x
+    if isinstance(x, jax.Array) and jax.process_count() > 1:
+        seen: dict[tuple, np.ndarray] = {}
+        for sh in x.addressable_shards:
+            rng = _shard_ranges(x.shape, sh.index)
+            if rng not in seen:  # replicas within the process: one copy
+                seen[rng] = np.asarray(sh.data)
+        return ShardedHostLeaf(
+            global_shape=tuple(int(d) for d in x.shape),
+            dtype=str(x.dtype),
+            shards=tuple(sorted(seen.items(), key=lambda kv: kv[0])),
+        )
+    return np.asarray(jax.device_get(x))
+
+
+def _shard_filename(name: str, ranges: tuple[tuple[int, int], ...]) -> str:
+    body = "-".join(f"{a}_{b}" for a, b in ranges) or "scalar"
+    return f"{name}.shard-{body}.npy"
+
+
+def _parse_shard_ranges(fname: str, name: str) -> tuple[tuple[int, int], ...]:
+    body = fname[len(name) + len(".shard-") : -len(".npy")]
+    if body == "scalar":
+        return ()
+    return tuple(
+        (int(a), int(b)) for a, b in (part.split("_") for part in body.split("-"))
+    )
+
+
+def _barrier(tag: str) -> None:
+    """Block until every process of the job reaches this point."""
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(tag)
+
+
 def _leaf_paths(tree: Tree) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
 
@@ -80,31 +168,85 @@ def _step_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"step_{step:08d}")
 
 
-def save_checkpoint(directory: str, step: int, tree: Tree) -> str:
-    """Write ``tree`` for ``step``; atomic commit; returns the final path."""
+def save_checkpoint(
+    directory: str, step: int, tree: Tree, *, collective: bool = True
+) -> str:
+    """Write ``tree`` for ``step``; atomic commit; returns the final path.
+
+    Single process: the original one-file-per-leaf format, byte identical.
+    Multi-process (``jax.process_count() > 1``): a *collective* — every
+    process must call it with the same ``step``. All processes stage their
+    shard files into one deterministic tmp directory, barrier, and process 0
+    alone writes the manifest, renames and updates ``LATEST`` (the commit);
+    a final barrier keeps no process running ahead of an uncommitted
+    checkpoint.
+
+    ``collective=False`` forces the single-writer path even in a
+    multi-process job: no barriers, this process writes every (host) leaf —
+    for process-0-only writes of already-gathered trees (the artifact
+    export), which must not entangle with the job's collective order.
+    """
     os.makedirs(directory, exist_ok=True)
     final = _step_dir(directory, step)
-    tmp = f"{final}.tmp-{secrets.token_hex(4)}"
-    os.makedirs(tmp, exist_ok=True)
+    procs = jax.process_count() if collective else 1
+    pid = jax.process_index() if collective else 0
+    if procs == 1:
+        tmp = f"{final}.tmp-{secrets.token_hex(4)}"
+        os.makedirs(tmp, exist_ok=True)
+    else:
+        # deterministic name: every process must stage into the *same*
+        # directory of the shared checkpoint filesystem
+        tmp = f"{final}.tmp-mp"
+        if pid == 0:
+            if os.path.exists(tmp):  # stale tmp from a killed earlier job
+                shutil.rmtree(tmp)
+            os.makedirs(tmp, exist_ok=True)
+        _barrier(f"ckpt-begin-{step}")
 
     leaves = _leaf_paths(tree)
     manifest = {"step": step, "leaves": []}
     for name, leaf in leaves:
-        arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, f"{name}.npy"), arr)
-        manifest["leaves"].append(
-            {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
-        )
-    with open(os.path.join(tmp, _MANIFEST), "w") as f:
-        json.dump(manifest, f)
+        leaf = host_snapshot_leaf(leaf)
+        if isinstance(leaf, ShardedHostLeaf):
+            for ranges, block in leaf.shards:
+                path = os.path.join(tmp, _shard_filename(name, ranges))
+                # partially-replicated shards can be held by several
+                # processes: each stages under its own name and the replace
+                # races to identical content, never a torn file
+                stage = f"{path}.p{pid}"
+                with open(stage, "wb") as f:
+                    np.save(f, block)
+                os.replace(stage, path)
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "shape": list(leaf.global_shape),
+                    "dtype": leaf.dtype,
+                    "sharded": True,
+                }
+            )
+        else:
+            arr = np.asarray(leaf)
+            if pid == 0:  # replicated leaf: one writer suffices
+                np.save(os.path.join(tmp, f"{name}.npy"), arr)
+            manifest["leaves"].append(
+                {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
 
-    if os.path.exists(final):  # re-save of same step: replace
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    latest_tmp = os.path.join(directory, f".LATEST-{secrets.token_hex(4)}")
-    with open(latest_tmp, "w") as f:
-        f.write(str(step))
-    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    if procs > 1:
+        _barrier(f"ckpt-written-{step}")
+    if pid == 0:
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):  # re-save of same step: replace
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        latest_tmp = os.path.join(directory, f".LATEST-{secrets.token_hex(4)}")
+        with open(latest_tmp, "w") as f:
+            f.write(str(step))
+        os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    if procs > 1:
+        _barrier(f"ckpt-committed-{step}")
     return final
 
 
@@ -122,6 +264,52 @@ def latest_step(directory: str) -> Optional[int]:
         ) from e
 
 
+def _assemble_sharded_leaf(final: str, entry: dict) -> np.ndarray:
+    """Reassemble a ``"sharded": true`` leaf from its shard files."""
+    name = entry["name"]
+    shape = tuple(int(d) for d in entry["shape"])
+    dtype = np.dtype(entry["dtype"])
+    prefix = f"{name}.shard-"
+    files = [
+        f
+        for f in os.listdir(final)
+        if f.startswith(prefix) and f.endswith(".npy")
+    ]
+    if not files:
+        raise CheckpointCorruptError(
+            f"sharded checkpoint leaf {name!r} has no shard files under {final}"
+        )
+    out = np.zeros(shape, dtype)
+    covered = np.zeros(shape, bool)
+    for fname in files:
+        try:
+            ranges = _parse_shard_ranges(fname, name)
+            block = np.load(os.path.join(final, fname))
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable checkpoint shard {os.path.join(final, fname)}: {e}"
+            ) from e
+        sl = tuple(slice(a, b) for a, b in ranges)
+        out[sl] = block
+        covered[sl] = True
+    if not covered.all():
+        raise CheckpointCorruptError(
+            f"sharded checkpoint leaf {name!r} under {final} has gaps: "
+            f"{int(covered.size - covered.sum())} of {covered.size} elements "
+            f"missing (a writer process died before the commit barrier?)"
+        )
+    return out
+
+
+def _place_restored(arr: np.ndarray, sharding) -> jax.Array:
+    """Place a restored host array under any target sharding — including one
+    spanning processes this host cannot address (the elastic/resharding
+    path: each process supplies only the slices it owns)."""
+    if getattr(sharding, "is_fully_addressable", True):
+        return jax.device_put(arr, sharding)
+    return jax.make_array_from_callback(arr.shape, sharding, lambda idx: arr[idx])
+
+
 def restore_checkpoint(
     directory: str,
     target: Tree,
@@ -133,7 +321,10 @@ def restore_checkpoint(
 
     ``shardings``: optional NamedSharding tree (same structure) — this is the
     elastic path: the saved arrays are placed directly onto the *new* mesh,
-    whatever its device count, without requiring the saving mesh.
+    whatever its device count, without requiring the saving mesh. Without an
+    explicit tree, a target leaf that is itself a sharded jax array of the
+    restored shape lends its sharding (so restoring device state round-trips
+    placement, across any process count).
     """
     if step is None:
         step = latest_step(directory)
@@ -156,7 +347,8 @@ def restore_checkpoint(
         )
     by_name = {e["name"]: e for e in manifest["leaves"] if isinstance(e, dict)}
 
-    names = [n for n, _ in _leaf_paths(target)]
+    target_pairs = _leaf_paths(target)
+    names = [n for n, _ in target_pairs]
     missing = [n for n in names if n not in by_name]
     if missing:
         raise CheckpointSchemaError(
@@ -168,20 +360,54 @@ def restore_checkpoint(
         shard_leaves = [s for _, s in _leaf_paths(shardings)]
 
     out_leaves = []
-    for i, name in enumerate(names):
+    for i, (name, target_leaf) in enumerate(target_pairs):
         leaf_path = os.path.join(final, f"{name}.npy")
-        try:
-            arr = np.load(leaf_path)
-        except (OSError, ValueError, EOFError) as e:
+        if os.path.exists(leaf_path):
+            try:
+                arr = np.load(leaf_path)
+            except (OSError, ValueError, EOFError) as e:
+                raise CheckpointCorruptError(
+                    f"unreadable checkpoint leaf {leaf_path} (truncated or "
+                    f"overwritten?): {e}"
+                ) from e
+        elif by_name[name].get("sharded"):
+            arr = _assemble_sharded_leaf(final, by_name[name])
+        else:
             raise CheckpointCorruptError(
-                f"unreadable checkpoint leaf {leaf_path} (truncated or "
-                f"overwritten?): {e}"
-            ) from e
-        if shard_leaves is not None:
-            out_leaves.append(jax.device_put(arr, shard_leaves[i]))
+                f"checkpoint leaf file {leaf_path} missing (truncated commit?)"
+            )
+        if isinstance(target_leaf, ShardedHostLeaf):
+            # a placeholder target (e.g. posterior_merge's remote chains):
+            # keep only the ranges this process claims — usually none — so
+            # a later save never writes a stale local copy of a leaf whose
+            # live value advances on another process
+            out_leaves.append(
+                dataclasses.replace(
+                    target_leaf,
+                    shards=tuple(
+                        (rng, arr[tuple(slice(a, b) for a, b in rng)])
+                        for rng, _ in target_leaf.shards
+                    ),
+                )
+            )
+        elif shard_leaves is not None:
+            out_leaves.append(_place_restored(arr, shard_leaves[i]))
         elif mesh is not None:
             out_leaves.append(jax.device_put(arr, NamedSharding(mesh, P())))
         else:
-            out_leaves.append(jax.numpy.asarray(arr))
+            s = getattr(target_leaf, "sharding", None)
+            if (
+                isinstance(s, jax.sharding.Sharding)
+                and tuple(getattr(target_leaf, "shape", ())) == tuple(arr.shape)
+                and (not s.is_fully_addressable or len(s.device_set) > 1)
+            ):
+                # multi-device targets lend their sharding (cross-process
+                # ones *must* — a host array cannot feed a global-mesh
+                # program). Single-device targets stay uncommitted host
+                # placements, as they always were: committing them would
+                # pin device placement that the old path left to jit.
+                out_leaves.append(_place_restored(arr, s))
+            else:
+                out_leaves.append(jax.numpy.asarray(arr))
     treedef = jax.tree_util.tree_structure(target)
     return jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpoint import (
+    host_snapshot_leaf,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
@@ -60,9 +61,15 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: Tree) -> None:
-        """Snapshot now; write in background (if async)."""
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        if self._pool is None:
+        """Snapshot now; write in background (if async).
+
+        Multi-process jobs always commit synchronously on the caller thread:
+        the commit protocol runs cross-process barriers, which must
+        interleave with the main thread's other collectives in program
+        order — a background writer would deadlock against them.
+        """
+        host_tree = jax.tree.map(host_snapshot_leaf, tree)
+        if self._pool is None or jax.process_count() > 1:
             save_checkpoint(self.directory, step, host_tree)
             self._retain()
         else:
@@ -105,6 +112,8 @@ class CheckpointManager:
         return sorted(steps)
 
     def _retain(self) -> None:
+        if jax.process_index() != 0:
+            return  # one pruner; peers may still be reading these dirs
         steps = self._list_steps()
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)

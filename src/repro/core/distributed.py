@@ -23,8 +23,13 @@ Correctness contract: for identical (key, data), every comm_mode and every
 shard count draws the *same* posterior samples as the sequential
 ``core.gibbs`` sampler, up to float reduction order — per-item noise is keyed
 by original item id (`posterior.item_noise`) and hyper-parameter sampling
-consumes psum'd sufficient statistics with a shared key. This turns the
-paper's "all versions reach the same RMSE" claim (§V-B) into an exact test.
+consumes cross-shard sufficient statistics reduced in a fixed order
+(:func:`_psum_ordered`). This turns the paper's "all versions reach the same
+RMSE" claim (§V-B) into an exact test, and makes the draws independent of
+*how* the ring mesh is realized: a 2-process × 4-device mesh runs the same
+per-shard program and the same reduction tree as 1 process × 8 devices, so
+multi-process runs are bitwise-identical to single-process ones
+(tests/test_multiproc.py).
 """
 from __future__ import annotations
 
@@ -63,7 +68,10 @@ from repro.core.gibbs import SweepMetrics, sweep_keys
 from repro.core.hyper import hyper_sufficient_stats, sample_hyper_from_stats
 from repro.core.prediction import PredictionState, rmse, update_posterior_accum
 from repro.core.types import BPMFConfig, Bucket, HyperParams, PosteriorAccum
-from repro.data.sparse import RatingsCOO, csr_from_coo, train_test_split
+from repro.data.sparse import (
+    ChunkedRatings, RatingsCOO, StableMeanAccumulator, csr_from_coo, stable_mean,
+    train_test_split,
+)
 from repro.utils import pytree_dataclass, static_field
 
 RING_AXIS = "ring"
@@ -134,17 +142,92 @@ class DistState:
 
 @dataclasses.dataclass(frozen=True)
 class DistPlan:
-    """Host-side record of how the problem was partitioned (static)."""
+    """Host-side record of how the problem was partitioned (static).
+
+    ``local_shards`` / ``local_nnz`` / ``total_nnz`` are populated by the
+    per-host builder (:func:`build_distributed_data_per_host`): which ring
+    shards this process materialized and how many training ratings it kept
+    versus the global count — the allocation guard tests assert
+    ``local_nnz < total_nnz`` on every process of a multi-process run.
+    """
 
     part_users: Partition
     part_movies: Partition
     num_shards: int
     strategy: str
+    local_shards: tuple[int, ...] | None = None
+    local_nnz: int = 0
+    total_nnz: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalShardedArray:
+    """Host stand-in for a ring-sharded array of which only one row block exists.
+
+    The per-host data builder materializes bucket arrays only for this
+    process's shards; placement turns the block into a global ``jax.Array``
+    via ``make_array_from_callback`` without any process ever holding the
+    full array. ``shape``/``dtype`` describe the *global* array; ``block``
+    holds rows ``[row_offset, row_offset + block.shape[0])``.
+    """
+
+    block: np.ndarray
+    global_rows: int
+    row_offset: int
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.global_rows,) + self.block.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.block.dtype
+
+    def place(self, sharding: NamedSharding) -> jax.Array:
+        def cb(idx):
+            rows = idx[0]
+            start = 0 if rows.start is None else rows.start
+            stop = self.global_rows if rows.stop is None else rows.stop
+            if start < self.row_offset or stop > self.row_offset + self.block.shape[0]:
+                raise ValueError(
+                    f"device shard rows [{start}, {stop}) are outside this "
+                    f"process's materialized block "
+                    f"[{self.row_offset}, {self.row_offset + self.block.shape[0]}) "
+                    "— local_shards does not match the mesh's addressable devices"
+                )
+            sl = slice(start - self.row_offset, stop - self.row_offset)
+            return self.block[(sl,) + tuple(idx[1:])]
+
+        return jax.make_array_from_callback(self.shape, sharding, cb)
 
 
 # --------------------------------------------------------------------------
 # Host-side data distribution (paper §IV-B)
 # --------------------------------------------------------------------------
+
+
+def _neighbor_shard_counts(
+    indptr: np.ndarray, indices: np.ndarray, part_opp: Partition, num_shards: int
+) -> np.ndarray:
+    """``[num_items, S]`` count of each item's neighbors per owning opposite shard."""
+    nnz_all = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    row_of = np.repeat(np.arange(len(nnz_all), dtype=np.int64), nnz_all)
+    src = part_opp.perm[indices] // part_opp.cap
+    flat = np.bincount(row_of * num_shards + src, minlength=len(nnz_all) * num_shards)
+    return flat.reshape(len(nnz_all), num_shards).astype(np.int32)
+
+
+def _pad_class_of(counts: np.ndarray, pads_sorted: Sequence[int]) -> np.ndarray:
+    """Vectorized pad class: smallest configured pad >= n, else next power of two."""
+    pads_arr = np.asarray(pads_sorted, dtype=np.int64)
+    idx = np.searchsorted(pads_arr, counts, side="left")
+    out = pads_arr[np.minimum(idx, len(pads_arr) - 1)].copy()
+    for i in np.nonzero(idx >= len(pads_arr))[0]:
+        p = int(pads_arr[-1])
+        while p < counts[i]:
+            p *= 2
+        out[i] = p
+    return out
 
 
 def _ring_side_buckets(
@@ -156,6 +239,9 @@ def _ring_side_buckets(
     num_shards: int,
     pads: Sequence[int],
     bucket_multiple: int = 8,
+    *,
+    shard_counts: np.ndarray | None = None,
+    local_shards: Sequence[int] | None = None,
 ) -> RingSide:
     """Build the per-step bucketed neighbor lists for one side.
 
@@ -163,79 +249,86 @@ def _ring_side_buckets(
     neighbors j with shard(j) == (d - t) mod S, store their *local* opposite
     indices. Bucket shapes are agreed globally (max over devices per step &
     pad class) so the SPMD program is identical on every device.
+
+    Per-host mode: with ``local_shards`` a contiguous subset of shards, the
+    bucket *shapes* are still computed globally — from ``shard_counts``, the
+    ``[num_items, S]`` per-source-shard neighbor counts, which every process
+    derives from the same deterministic partition — but the bucket *arrays*
+    are materialized only for the local shards and wrapped in
+    :class:`LocalShardedArray`. The CSR inputs then only need rows for
+    locally-owned items (remote rows may be empty); slot order (ascending
+    original id within each shard) and neighbor order (CSR order, i.e.
+    sorted by original opposite id) are layout-invariant, so the local block
+    is bitwise-identical to the corresponding rows of a full build.
     """
     S = num_shards
     cap = part_self.cap
     cap_opp = part_opp.cap
+    num_items = len(indptr) - 1
 
-    # per (device, step): lists of (local_row, nbr_local[], val[])
-    per_dt: list[list[list[tuple[int, np.ndarray, np.ndarray]]]] = [
-        [[] for _ in range(S)] for _ in range(S)
-    ]
-    nnz_all = indptr[1:] - indptr[:-1]
-    for old_id in range(len(nnz_all)):
-        new_id = part_self.perm[old_id]
-        d, r = divmod(int(new_id), cap)
-        lo, hi = indptr[old_id], indptr[old_id + 1]
-        nbr_new = part_opp.perm[indices[lo:hi]]  # relabeled opposite ids
-        vals = values[lo:hi]
-        src_shard = nbr_new // cap_opp
-        local = nbr_new % cap_opp
-        for t in range(S):
-            o = (d - t) % S
-            sel = src_shard == o
-            if np.any(sel) or t == 0:
-                # t == 0 rows are always present so every item is sampled
-                per_dt[d][t].append((r, local[sel].astype(np.int64), vals[sel]))
+    full = local_shards is None
+    local = tuple(range(S)) if full else tuple(int(d) for d in local_shards)
+    if list(local) != list(range(local[0], local[-1] + 1)):
+        raise ValueError(f"local_shards must be contiguous ascending, got {local}")
+    L = len(local)
+
+    if shard_counts is None:
+        shard_counts = _neighbor_shard_counts(indptr, indices, part_opp, S)
 
     pads_sorted = sorted(pads)
-
-    def pad_class(n: int) -> int:
-        for p in pads_sorted:
-            if n <= p:
-                return p
-        # beyond the largest configured pad: next power of two
-        p = pads_sorted[-1]
-        while p < n:
-            p *= 2
-        return p
+    d_of = (part_self.perm // cap).astype(np.int64)  # owning shard per item
+    item_ids_all = np.arange(num_items, dtype=np.int64)
 
     steps: list[tuple[Bucket, ...]] = []
     for t in range(S):
-        # global bucket plan: per pad class, B = max over devices
-        counts: dict[int, int] = {}
-        for d in range(S):
-            local_counts: dict[int, int] = {}
-            for _, nbr, _ in per_dt[d][t]:
-                pc = pad_class(len(nbr))
-                local_counts[pc] = local_counts.get(pc, 0) + 1
-            for pc, c in local_counts.items():
-                counts[pc] = max(counts.get(pc, 0), c)
+        src_t = (d_of - t) % S
+        cnt_t = shard_counts[item_ids_all, src_t].astype(np.int64)
+        present = (cnt_t > 0) | (t == 0)  # t == 0 rows always present
+        pc_t = _pad_class_of(cnt_t, pads_sorted)
+        # global bucket plan: per pad class, B = max over ALL devices
         buckets_t: list[Bucket] = []
-        for pc in sorted(counts):
-            B = -(-counts[pc] // bucket_multiple) * bucket_multiple
-            item_ids = np.full((S, B), -1, dtype=np.int32)
-            nbr = np.zeros((S, B, pc), dtype=np.int32)
-            val = np.zeros((S, B, pc), dtype=np.float32)
-            nnz = np.zeros((S, B), dtype=np.int32)
-            for d in range(S):
-                slot = 0
-                for r, nb, vl in per_dt[d][t]:
-                    if pad_class(len(nb)) != pc:
-                        continue
-                    item_ids[d, slot] = r
-                    nnz[d, slot] = len(nb)
-                    nbr[d, slot, : len(nb)] = nb
-                    val[d, slot, : len(nb)] = vl
-                    slot += 1
-            buckets_t.append(
-                Bucket(
-                    item_ids=jnp.asarray(item_ids.reshape(S * B)),
-                    nbr=jnp.asarray(nbr.reshape(S * B, pc)),
-                    val=jnp.asarray(val.reshape(S * B, pc)),
-                    nnz=jnp.asarray(nnz.reshape(S * B)),
+        for pc in sorted(int(p) for p in np.unique(pc_t[present])):
+            in_class = present & (pc_t == pc)
+            per_dev = np.bincount(d_of[in_class], minlength=S)
+            B = -(-int(per_dev.max()) // bucket_multiple) * bucket_multiple
+            item_ids = np.full((L, B), -1, dtype=np.int32)
+            nbr = np.zeros((L, B, pc), dtype=np.int32)
+            val = np.zeros((L, B, pc), dtype=np.float32)
+            nnz = np.zeros((L, B), dtype=np.int32)
+            for li, d in enumerate(local):
+                # ascending original id == insertion order of the full build
+                for slot, old_id in enumerate(np.nonzero(in_class & (d_of == d))[0]):
+                    r = int(part_self.perm[old_id]) % cap
+                    lo, hi = indptr[old_id], indptr[old_id + 1]
+                    nbr_new = part_opp.perm[indices[lo:hi]]
+                    sel = (nbr_new // cap_opp) == ((d - t) % S)
+                    nb = (nbr_new % cap_opp)[sel]
+                    item_ids[li, slot] = r
+                    nnz[li, slot] = len(nb)
+                    nbr[li, slot, : len(nb)] = nb
+                    val[li, slot, : len(nb)] = values[lo:hi][sel]
+            if full:
+                buckets_t.append(
+                    Bucket(
+                        item_ids=jnp.asarray(item_ids.reshape(S * B)),
+                        nbr=jnp.asarray(nbr.reshape(S * B, pc)),
+                        val=jnp.asarray(val.reshape(S * B, pc)),
+                        nnz=jnp.asarray(nnz.reshape(S * B)),
+                    )
                 )
-            )
+            else:
+                off = local[0] * B
+
+                def wrap(a: np.ndarray) -> LocalShardedArray:
+                    return LocalShardedArray(
+                        block=a.reshape((L * B,) + a.shape[2:]),
+                        global_rows=S * B,
+                        row_offset=off,
+                    )
+
+                buckets_t.append(
+                    Bucket(item_ids=wrap(item_ids), nbr=wrap(nbr), val=wrap(val), nnz=wrap(nnz))
+                )
         steps.append(tuple(buckets_t))
 
     orig = np.asarray(part_self.inv_perm, dtype=np.int32)  # [S*cap], -1 pads
@@ -243,7 +336,7 @@ def _ring_side_buckets(
         steps=tuple(steps),
         orig_ids=jnp.asarray(orig),
         cap=cap,
-        num_items=len(nnz_all),
+        num_items=num_items,
     )
 
 
@@ -262,10 +355,13 @@ def build_distributed_data(
 
     Splits train/test, computes the cost-balanced partition of both sides,
     relabels R accordingly and builds the per-ring-step neighbor lists.
+    The centering mean uses the chunking-invariant accumulator so a
+    per-host build of the same ratings (:func:`build_distributed_data_per_host`)
+    centers bitwise-identically.
     """
     train, test = train_test_split(coo, test_fraction, seed)
-    mean = float(train.vals.mean()) if train.nnz else 0.0
-    centered = train.vals - mean
+    mean = stable_mean(train.vals) if train.nnz else 0.0
+    centered = train.vals - np.float32(mean)
 
     u_indptr, u_idx, u_val = csr_from_coo(train.rows, train.cols, centered, coo.num_users)
     m_indptr, m_idx, m_val = csr_from_coo(train.cols, train.rows, centered, coo.num_movies)
@@ -297,6 +393,159 @@ def build_distributed_data(
         max_rating=hi,
     )
     return data, DistPlan(part_u, part_m, num_shards, strategy)
+
+
+def local_shard_range(num_shards: int, process_index: int, num_processes: int) -> range:
+    """The contiguous ring shards owned by one process.
+
+    Global device order is process-major, so process p's addressable devices
+    are exactly shards ``[p*S/P, (p+1)*S/P)`` of a ring mesh over all global
+    devices.
+    """
+    if num_shards % num_processes:
+        raise ValueError(
+            f"num_shards={num_shards} must be divisible by num_processes={num_processes}"
+        )
+    per = num_shards // num_processes
+    return range(process_index * per, (process_index + 1) * per)
+
+
+def build_distributed_data_per_host(
+    ratings: ChunkedRatings,
+    num_shards: int,
+    local_shards: Sequence[int],
+    pads: Sequence[int] = (8, 32, 128, 512, 2048),
+    test_fraction: float = 0.1,
+    seed: int = 0,
+    strategy: str = "lpt",
+    cost_model: CostModel | None = None,
+    min_rating: float | None = None,
+    max_rating: float | None = None,
+) -> tuple[DistBPMFData, DistPlan]:
+    """Per-host distribution pipeline: global plan, local materialization.
+
+    Every process streams the same rating chunks twice and computes the same
+    deterministic global state — train/test split (the seeded RNG stream is
+    consumed in chunk order, which equals the one-shot draw for PCG64),
+    per-item rating counts, the cost-balanced partitions, the centering mean
+    (chunking-invariant accumulator) and the global bucket shape plan — but
+    only *retains* training ratings that touch one of its ``local_shards``
+    and only materializes those shards' bucket arrays (as
+    :class:`LocalShardedArray` blocks). No process ever holds the full
+    training rating array; the guard below raises if the retention filter
+    degenerates. The held-out test triples stay replicated (they are
+    device-replicated at runtime anyway).
+
+    With ``local_shards`` covering every shard this is bitwise-identical to
+    :func:`build_distributed_data` on the materialized stream — asserted in
+    tests/test_multiproc.py.
+    """
+    S = num_shards
+    local = tuple(int(d) for d in local_shards)
+    U, M = ratings.num_users, ratings.num_movies
+
+    # -- pass 1: split + per-item train counts + mean + test triples ------
+    rng = np.random.default_rng(seed)
+    u_nnz = np.zeros(U, dtype=np.int64)
+    m_nnz = np.zeros(M, dtype=np.int64)
+    mean_acc = StableMeanAccumulator()
+    test_rows, test_cols, test_vals = [], [], []
+    vmin, vmax = np.inf, -np.inf
+    total_train = 0
+    for chunk in ratings.chunks():
+        if chunk.nnz > ratings.chunk_rows:
+            raise ValueError(
+                f"chunk of {chunk.nnz} ratings exceeds chunk_rows={ratings.chunk_rows}"
+            )
+        t = rng.random(chunk.nnz) < test_fraction
+        tr = ~t
+        u_nnz += np.bincount(chunk.rows[tr], minlength=U)
+        m_nnz += np.bincount(chunk.cols[tr], minlength=M)
+        mean_acc.add(chunk.vals[tr])
+        test_rows.append(chunk.rows[t])
+        test_cols.append(chunk.cols[t])
+        test_vals.append(chunk.vals[t])
+        if chunk.nnz:
+            vmin = min(vmin, float(chunk.vals.min()))
+            vmax = max(vmax, float(chunk.vals.max()))
+        total_train += int(tr.sum())
+    mean = mean_acc.mean()
+
+    cm = cost_model or CostModel()
+    part_u = partition_items(u_nnz, S, cm, strategy)
+    part_m = partition_items(m_nnz, S, cm, strategy)
+    shard_of_u = (part_u.perm // part_u.cap).astype(np.int64)
+    shard_of_m = (part_m.perm // part_m.cap).astype(np.int64)
+    local_u = np.isin(shard_of_u, local)
+    local_m = np.isin(shard_of_m, local)
+
+    # -- pass 2: neighbor shard counts (global) + local rating retention --
+    rng2 = np.random.default_rng(seed)
+    cnt_u = np.zeros(U * S, dtype=np.int64)
+    cnt_m = np.zeros(M * S, dtype=np.int64)
+    keep_r, keep_c, keep_v = [], [], []
+    for chunk in ratings.chunks():
+        t = rng2.random(chunk.nnz) < test_fraction
+        tr = ~t
+        r, c, v = chunk.rows[tr], chunk.cols[tr], chunk.vals[tr]
+        cnt_u += np.bincount(r.astype(np.int64) * S + shard_of_m[c], minlength=U * S)
+        cnt_m += np.bincount(c.astype(np.int64) * S + shard_of_u[r], minlength=M * S)
+        keep = local_u[r] | local_m[c]
+        keep_r.append(r[keep])
+        keep_c.append(c[keep])
+        keep_v.append(v[keep])
+    cnt_u = cnt_u.reshape(U, S).astype(np.int32)
+    cnt_m = cnt_m.reshape(M, S).astype(np.int32)
+
+    r = np.concatenate(keep_r) if keep_r else np.zeros(0, np.int32)
+    c = np.concatenate(keep_c) if keep_c else np.zeros(0, np.int32)
+    v = np.concatenate(keep_v) if keep_v else np.zeros(0, np.float32)
+    local_nnz = int(r.shape[0])
+    if len(local) < S and total_train and local_nnz >= total_train:
+        raise RuntimeError(
+            f"per-host retention kept all {total_train} training ratings on a "
+            f"process owning only shards {local} of {S} — the locality filter "
+            "is not reducing the resident rating array"
+        )
+    cv = v - np.float32(mean)
+
+    own_u = local_u[r]  # ratings whose user is locally owned
+    own_m = local_m[c]
+    u_indptr, u_idx, u_val = csr_from_coo(r[own_u], c[own_u], cv[own_u], U)
+    m_indptr, m_idx, m_val = csr_from_coo(c[own_m], r[own_m], cv[own_m], M)
+
+    users = _ring_side_buckets(
+        u_indptr, u_idx, u_val, part_u, part_m, S, pads,
+        shard_counts=cnt_u, local_shards=local,
+    )
+    movies = _ring_side_buckets(
+        m_indptr, m_idx, m_val, part_m, part_u, S, pads,
+        shard_counts=cnt_m, local_shards=local,
+    )
+
+    trows = np.concatenate(test_rows) if test_rows else np.zeros(0, np.int32)
+    tcols = np.concatenate(test_cols) if test_cols else np.zeros(0, np.int32)
+    tvals = np.concatenate(test_vals) if test_vals else np.zeros(0, np.float32)
+    lo = (vmin if np.isfinite(vmin) else -np.inf) if min_rating is None else min_rating
+    hi = (vmax if np.isfinite(vmax) else np.inf) if max_rating is None else max_rating
+    data = DistBPMFData(
+        users=users,
+        movies=movies,
+        test=DistTestSet(
+            rows=jnp.asarray(part_u.perm[trows], jnp.int32),
+            cols=jnp.asarray(part_m.perm[tcols], jnp.int32),
+            vals=jnp.asarray(tvals, jnp.float32),
+        ),
+        mean_rating=jnp.asarray(mean, jnp.float32),
+        num_shards=S,
+        min_rating=lo,
+        max_rating=hi,
+    )
+    plan = DistPlan(
+        part_u, part_m, S, strategy,
+        local_shards=local, local_nnz=local_nnz, total_nnz=total_train,
+    )
+    return data, plan
 
 
 # --------------------------------------------------------------------------
@@ -444,15 +693,34 @@ def _half_sweep_allgather(
     return posterior.sample_from_terms(key, side.orig_ids, G, g, hyper)
 
 
+def _psum_ordered(x: jax.Array) -> jax.Array:
+    """Ring-axis sum with a reduction order fixed by the program, not the fabric.
+
+    ``lax.psum`` leaves the reduction tree to the collective backend, so a
+    cross-process all-reduce (e.g. gloo's ring) and XLA's single-process
+    all-reduce sum in different orders and differ in the last float bit —
+    enough to break the multi-process == single-process bitwise contract.
+    An ``all_gather`` moves bytes exactly; the axis-0 sum then runs inside
+    the (identical) per-shard program, so every mesh realization reduces in
+    the same order. Only worth the extra bytes for small operands — here the
+    [K]/[K,K] hyper sufficient statistics.
+    """
+    return jnp.sum(jax.lax.all_gather(x, RING_AXIS), axis=0)
+
+
 def _sample_hyper_dist(
     key: jax.Array, X_loc: jax.Array, orig_ids: jax.Array, prior
 ) -> HyperParams:
-    """NW conditional from psum'd sufficient statistics (identical on all devices)."""
+    """NW conditional from globally-reduced sufficient statistics.
+
+    Identical on all devices; uses the order-deterministic reduction so the
+    draw does not depend on the process layout of the ring mesh.
+    """
     weights = (orig_ids >= 0).astype(X_loc.dtype)
     n, sx, sxx = hyper_sufficient_stats(X_loc, weights)
-    n = jax.lax.psum(n, RING_AXIS)
-    sx = jax.lax.psum(sx, RING_AXIS)
-    sxx = jax.lax.psum(sxx, RING_AXIS)
+    n = _psum_ordered(n)
+    sx = _psum_ordered(sx)
+    sxx = _psum_ordered(sxx)
     return sample_hyper_from_stats(key, n, sx, sxx, prior)
 
 
@@ -601,7 +869,14 @@ def _sweep_block_device_fn(
 
 
 def make_ring_mesh(devices: Sequence[jax.Device] | None = None) -> Mesh:
-    """1-D ring mesh over all (or the given) devices."""
+    """1-D ring mesh over all (or the given) devices.
+
+    ``jax.devices()`` is the *global*, process-major device list, so after
+    ``jax.distributed.initialize`` this mesh spans every process — shard d
+    is addressable by process ``d // local_device_count``. The logical mesh
+    (and therefore the compiled per-shard program) is identical however the
+    devices are split across processes.
+    """
     devices = list(devices) if devices is not None else jax.devices()
     return Mesh(np.asarray(devices), (RING_AXIS,))
 
@@ -651,11 +926,29 @@ def data_specs(data: DistBPMFData) -> DistBPMFData:
     )
 
 
+def place_global(x, sharding: NamedSharding) -> jax.Array:
+    """Place one host leaf under ``sharding``, multi-process aware.
+
+    ``device_put`` of a host array requires every device to be addressable;
+    in a multi-process mesh each process instead supplies only its local
+    shards via ``make_array_from_callback``. :class:`LocalShardedArray`
+    leaves (per-host builds) can *only* go through the callback path — the
+    callback is invoked per addressable shard, which is exactly the row
+    range the process materialized.
+    """
+    if isinstance(x, LocalShardedArray):
+        return x.place(sharding)
+    if jax.process_count() > 1:
+        arr = np.asarray(x)
+        return jax.make_array_from_callback(arr.shape, sharding, lambda idx: arr[idx])
+    return jax.device_put(x, sharding)
+
+
 def shard_data(data: DistBPMFData, mesh: Mesh) -> DistBPMFData:
     """Place the host-built data with its ring sharding."""
     specs = data_specs(data)
     return jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        lambda x, s: place_global(x, NamedSharding(mesh, s)),
         data,
         specs,
         is_leaf=lambda x: isinstance(x, (jax.Array, jnp.ndarray)) or hasattr(x, "shape"),
@@ -726,7 +1019,7 @@ def init_dist_accum(
     accum = PosteriorAccum.init(num_u, num_v, cfg.K, keep)
     specs = accum_specs()
     return jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), accum, specs
+        lambda x, s: place_global(x, NamedSharding(mesh, s)), accum, specs
     )
 
 
@@ -818,10 +1111,24 @@ def run_distributed(
     return state, pred_state, history
 
 
+def fetch_global(x) -> np.ndarray:
+    """Host copy of a (possibly multi-process) jax array.
+
+    ``np.asarray`` works for fully-addressable arrays; arrays sharded across
+    processes go through ``process_allgather`` — a collective, so every
+    process of the job must call this together.
+    """
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        from jax.experimental import multihost_utils
+
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+    return np.asarray(x)
+
+
 def gather_factors(
     state: DistState, plan: DistPlan
 ) -> tuple[np.ndarray, np.ndarray]:
     """Undo the relabeling: return (U, V) in original item order (host numpy)."""
-    U = np.asarray(state.U)
-    V = np.asarray(state.V)
+    U = fetch_global(state.U)
+    V = fetch_global(state.V)
     return U[plan.part_users.perm], V[plan.part_movies.perm]

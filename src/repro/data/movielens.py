@@ -11,32 +11,27 @@ import os
 
 import numpy as np
 
-from repro.data.sparse import RatingsCOO
+from repro.data.sparse import ChunkedRatings, RatingsCOO
 from repro.data.synthetic import CHEMBL_LIKE, ML20M_LIKE, ML100K_LIKE, synthetic_ratings
 from repro.utils import logger
 
 _CSV_CHUNK_ROWS = 1_000_000  # ~72 MB peak per chunk vs ~GBs for one-shot parse
 
 
-def _read_rating_chunks(
+def _iter_rating_chunks(
     path: str,
     *,
     delimiter: str | None,
     skip_header: int,
     chunk_rows: int,
-) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Stream a 3+-column rating file in bounded chunks.
+):
+    """Yield ``(col0, col1, vals)`` raw-id chunks of a 3+-column rating file.
 
-    The previous one-shot ``np.genfromtxt`` materialized the whole file as an
-    ``[nnz, ncols]`` float64 table (plus the raw text) before any downcast —
-    a multi-GB transient on ml-20m-scale inputs. Parsing ``chunk_rows`` lines
-    at a time and downcasting ids/values per chunk bounds peak memory by the
-    chunk size regardless of file length, with byte-identical output.
-
-    Returns:
-        ``(col0, col1, vals)`` — raw int64 ids and float32 ratings.
+    Parsing ``chunk_rows`` lines at a time bounds peak memory by the chunk
+    size regardless of file length; chunk boundaries are deterministic
+    (every ``chunk_rows`` non-blank source lines), which the per-host data
+    loader relies on for its seeded per-chunk train/test split.
     """
-    id0, id1, vals = [], [], []
     with open(path) as f:
         for _ in range(skip_header):
             f.readline()
@@ -52,9 +47,37 @@ def _read_rating_chunks(
             )
             if chunk.size == 0:
                 continue
-            id0.append(chunk[:, 0].astype(np.int64))
-            id1.append(chunk[:, 1].astype(np.int64))
-            vals.append(chunk[:, 2].astype(np.float32))
+            yield (
+                chunk[:, 0].astype(np.int64),
+                chunk[:, 1].astype(np.int64),
+                chunk[:, 2].astype(np.float32),
+            )
+
+
+def _read_rating_chunks(
+    path: str,
+    *,
+    delimiter: str | None,
+    skip_header: int,
+    chunk_rows: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Materialize :func:`_iter_rating_chunks` into full arrays.
+
+    The previous one-shot ``np.genfromtxt`` materialized the whole file as an
+    ``[nnz, ncols]`` float64 table (plus the raw text) before any downcast —
+    a multi-GB transient on ml-20m-scale inputs. Chunked parsing bounds the
+    transient by the chunk size, with byte-identical output.
+
+    Returns:
+        ``(col0, col1, vals)`` — raw int64 ids and float32 ratings.
+    """
+    id0, id1, vals = [], [], []
+    for c0, c1, v in _iter_rating_chunks(
+        path, delimiter=delimiter, skip_header=skip_header, chunk_rows=chunk_rows
+    ):
+        id0.append(c0)
+        id1.append(c1)
+        vals.append(v)
     if not id0:
         raise ValueError(f"no ratings parsed from {path!r}")
     return np.concatenate(id0), np.concatenate(id1), np.concatenate(vals)
@@ -83,6 +106,70 @@ def _parse_udata(path: str, chunk_rows: int = _CSV_CHUNK_ROWS) -> RatingsCOO:
     return RatingsCOO(
         users.astype(np.int32), movies.astype(np.int32), vals,
         int(users.max()) + 1, int(movies.max()) + 1,
+    )
+
+
+def load_movielens_chunked(
+    path: str | None = None,
+    variant: str = "ml-100k",
+    chunk_rows: int = _CSV_CHUNK_ROWS,
+) -> ChunkedRatings:
+    """Streaming loader for the per-host data path: no full rating arrays.
+
+    Two-pass protocol over the file: a scan pass derives the global id maps
+    (the sorted set of raw user/movie ids, matching ``np.unique``'s inverse
+    mapping in the one-shot loader bitwise) and the rating count; the
+    returned :class:`ChunkedRatings` then re-reads the file in bounded
+    chunks on every iteration, remapping raw ids per chunk via
+    ``np.searchsorted``. Peak memory is O(chunk + num ids) per process.
+    Falls back to chunking the synthetic stand-in when ``path`` is missing.
+    """
+    if not (path and os.path.exists(path)):
+        logger.info("movielens file not found, generating %s-shaped synthetic data", variant)
+        spec = ML20M_LIKE if variant == "ml-20m" else ML100K_LIKE
+        coo, _ = synthetic_ratings(spec)
+        return coo.chunked(chunk_rows)
+
+    is_csv = path.endswith(".csv")
+    delimiter = "," if is_csv else None
+    skip_header = 1 if is_csv else 0
+
+    uniq_u = np.zeros(0, dtype=np.int64)
+    uniq_m = np.zeros(0, dtype=np.int64)
+    nnz = 0
+    for c0, c1, _ in _iter_rating_chunks(
+        path, delimiter=delimiter, skip_header=skip_header, chunk_rows=chunk_rows
+    ):
+        uniq_u = np.union1d(uniq_u, c0)
+        uniq_m = np.union1d(uniq_m, c1)
+        nnz += len(c0)
+    if not nnz:
+        raise ValueError(f"no ratings parsed from {path!r}")
+
+    if is_csv:  # ml-20m: dense remap via the sorted id set (== np.unique inverse)
+        num_users, num_movies = len(uniq_u), len(uniq_m)
+
+        def remap(c0, c1):
+            return (
+                np.searchsorted(uniq_u, c0).astype(np.int32),
+                np.searchsorted(uniq_m, c1).astype(np.int32),
+            )
+    else:  # ml-100k u.data: ids are 1-based and already dense
+        num_users, num_movies = int(uniq_u.max()), int(uniq_m.max())
+
+        def remap(c0, c1):
+            return (c0 - 1).astype(np.int32), (c1 - 1).astype(np.int32)
+
+    def gen():
+        for c0, c1, v in _iter_rating_chunks(
+            path, delimiter=delimiter, skip_header=skip_header, chunk_rows=chunk_rows
+        ):
+            rows, cols = remap(c0, c1)
+            yield RatingsCOO(rows, cols, v, num_users, num_movies)
+
+    return ChunkedRatings(
+        chunk_fn=gen, num_users=num_users, num_movies=num_movies,
+        nnz=nnz, chunk_rows=chunk_rows,
     )
 
 

@@ -9,7 +9,8 @@ benchmarks/fig2_item_update.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import math
+from typing import Callable, Iterator, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +35,111 @@ class RatingsCOO:
 
     def transpose(self) -> "RatingsCOO":
         return RatingsCOO(self.cols, self.rows, self.vals, self.num_movies, self.num_users)
+
+    def chunked(self, chunk_rows: int = 1_000_000) -> "ChunkedRatings":
+        """View this in-memory COO as a re-iterable chunk stream (for tests
+        and synthetic datasets feeding the per-host loading path)."""
+
+        def gen() -> Iterator[RatingsCOO]:
+            for lo in range(0, max(self.nnz, 1), chunk_rows):
+                hi = min(lo + chunk_rows, self.nnz)
+                if hi > lo:
+                    yield RatingsCOO(
+                        self.rows[lo:hi], self.cols[lo:hi], self.vals[lo:hi],
+                        self.num_users, self.num_movies,
+                    )
+
+        return ChunkedRatings(
+            chunk_fn=gen, num_users=self.num_users, num_movies=self.num_movies,
+            nnz=self.nnz, chunk_rows=chunk_rows,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedRatings:
+    """Re-iterable bounded-memory rating stream with known global dims.
+
+    ``chunk_fn`` returns a *fresh* iterator of :class:`RatingsCOO` chunks on
+    every call (the per-host plan builder makes two passes). Chunks must
+    arrive in a deterministic order with at most ``chunk_rows`` ratings each
+    — the chunk boundaries are part of the data contract, because the
+    deterministic per-chunk train/test split consumes the seeded RNG stream
+    sequentially.
+    """
+
+    chunk_fn: Callable[[], Iterator[RatingsCOO]]
+    num_users: int
+    num_movies: int
+    nnz: int
+    chunk_rows: int
+
+    def chunks(self) -> Iterator[RatingsCOO]:
+        return self.chunk_fn()
+
+    def materialize(self) -> RatingsCOO:
+        """Concatenate the stream (for backends without a per-host path)."""
+        rows, cols, vals = [], [], []
+        for c in self.chunks():
+            rows.append(c.rows)
+            cols.append(c.cols)
+            vals.append(c.vals)
+        empty = np.zeros(0)
+        return RatingsCOO(
+            np.concatenate(rows) if rows else empty.astype(np.int32),
+            np.concatenate(cols) if cols else empty.astype(np.int32),
+            np.concatenate(vals) if vals else empty.astype(np.float32),
+            self.num_users, self.num_movies,
+        )
+
+
+#: Block size for :class:`StableMeanAccumulator` — the mean is defined as a
+#: function of fixed value-position blocks, never of caller chunk boundaries.
+MEAN_BLOCK = 1 << 20
+
+
+class StableMeanAccumulator:
+    """Streaming mean whose result is independent of feed chunk sizes.
+
+    Values are regrouped into fixed ``MEAN_BLOCK``-sized position blocks;
+    each complete block is summed with ``np.sum(..., dtype=float64)`` and the
+    block sums are combined with ``math.fsum``. Any chunking of the same
+    value sequence therefore produces bitwise-identical means — the property
+    the per-host data loader needs to agree with the in-memory builder.
+    """
+
+    def __init__(self) -> None:
+        self._buf: list[np.ndarray] = []
+        self._pending = 0
+        self._sums: list[float] = []
+        self._count = 0
+
+    def add(self, vals: np.ndarray) -> "StableMeanAccumulator":
+        vals = np.asarray(vals, dtype=np.float32)
+        self._count += len(vals)
+        self._buf.append(vals)
+        self._pending += len(vals)
+        if self._pending >= MEAN_BLOCK:
+            cat = np.concatenate(self._buf)
+            while len(cat) >= MEAN_BLOCK:
+                self._sums.append(float(np.sum(cat[:MEAN_BLOCK], dtype=np.float64)))
+                cat = cat[MEAN_BLOCK:]
+            self._buf = [cat]
+            self._pending = len(cat)
+        return self
+
+    def mean(self) -> float:
+        if not self._count:
+            return 0.0
+        sums = list(self._sums)
+        if self._pending:
+            tail = np.concatenate(self._buf)
+            sums.append(float(np.sum(tail, dtype=np.float64)))
+        return math.fsum(sums) / self._count
+
+
+def stable_mean(vals: np.ndarray) -> float:
+    """Chunking-invariant mean of a float32 array (see StableMeanAccumulator)."""
+    return StableMeanAccumulator().add(vals).mean()
 
 
 def csr_from_coo(

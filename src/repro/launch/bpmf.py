@@ -10,14 +10,21 @@ identical to an uninterrupted run. ``--devices N`` forces N host devices
 (CPU) so the ring/allgather backends exercise a real multi-device mesh —
 it must be applied before jax initializes, which is why this module parses
 arguments before importing anything heavy.
+
+Multi-process: ``--coordinator host:port --num-processes N --process-id i``
+(or the ``REPRO_*`` environment set by ``scripts/launch_multiproc.py``)
+joins this process into one jax job whose ring mesh spans every process's
+devices; ``--devices`` then means devices *per process*. Only process 0
+prints and exports — peers run the same collective program silently.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
-from repro.launch.hostdevices import force_host_device_count
+from repro.launch.hostdevices import init_multiprocess
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -67,7 +74,21 @@ def build_parser() -> argparse.ArgumentParser:
                         "(precision-weighted Gaussian product or uniform "
                         "pooling)")
     p.add_argument("--devices", type=int, default=0,
-                   help="force N host (CPU) devices before jax init")
+                   help="force N host (CPU) devices before jax init "
+                        "(per process in a multi-process job)")
+    p.add_argument("--coordinator", default=None,
+                   help="host:port of process 0 — joins a multi-process jax "
+                        "job (env fallback: REPRO_COORDINATOR)")
+    p.add_argument("--num-processes", type=int, default=None,
+                   help="process count of the multi-process job "
+                        "(env fallback: REPRO_NUM_PROCESSES)")
+    p.add_argument("--process-id", type=int, default=None,
+                   help="this process's rank in [0, num-processes) "
+                        "(env fallback: REPRO_PROCESS_ID)")
+    p.add_argument("--inject-failure", type=int, default=None, metavar="SWEEP",
+                   help="testing: raise a simulated NodeFailure on process 0 "
+                        "after SWEEP completes (skipped under --resume so an "
+                        "elastic restart does not re-fire it)")
     p.add_argument("--gram-impl", default="auto",
                    choices=["auto", "pallas_fused", "pallas", "xla"],
                    help="Gram hot-path dispatch: auto (autotune cache + "
@@ -89,12 +110,21 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
 
-    force_host_device_count(args.devices)
+    # joins the multi-process job when configured (flags or REPRO_* env);
+    # otherwise just forces the host device count. Either way XLA_FLAGS is
+    # settled before the heavy imports below.
+    init_multiprocess(
+        args.coordinator, args.num_processes, args.process_id,
+        local_devices=args.devices,
+    )
 
-    # heavy imports only after XLA_FLAGS is settled
     import jax
 
     from repro.bpmf import BPMFConfig, BPMFEngine, load_dataset
+    from repro.runtime.elastic import FailureInjector, StepTimer
+
+    main_proc = jax.process_index() == 0
+    say = print if main_proc else (lambda *a, **kw: None)
 
     dataset_kw = {}
     if args.dataset == "synthetic":
@@ -132,31 +162,56 @@ def main(argv: list[str] | None = None) -> int:
     resumed_at = 0
     if args.resume:
         resumed_at = engine.restore()
-        print(f"resumed from checkpoint at sweep {resumed_at}")
+        say(f"resumed from checkpoint at sweep {resumed_at}")
 
-    print(
+    # elastic-runtime hooks: the straggler watchdog times every sweep, and
+    # the injector simulates a preemption so the launcher's restart policy
+    # can be exercised end to end (never re-fires on a resumed run)
+    timer = StepTimer()
+    injector = None
+    if args.inject_failure is not None and main_proc and not args.resume:
+        injector = FailureInjector({args.inject_failure: 1})
+
+    say(
         f"backend={args.backend} devices={len(jax.devices())} "
+        f"processes={jax.process_count()} "
         f"dataset={args.dataset} R: {coo.num_users} x {coo.num_movies}, "
         f"{coo.nnz} ratings; K={cfg.model.K} sweeps={cfg.run.num_sweeps}"
     )
     t0 = time.time()
+    t_prev = t0
     for m in engine.sample():
         sweep = int(m.sweep)
+        t_now = time.time()
+        timer.record(sweep, t_now - t_prev)
+        t_prev = t_now
         if args.log_every and (sweep % args.log_every == 0 or sweep == cfg.run.num_sweeps):
-            print(
+            say(
                 f"  sweep {sweep:4d}  rmse(sample)={m.rmse_sample:.4f}  "
                 f"rmse(avg)={m.rmse_avg:.4f}"
             )
+        if injector is not None:
+            try:
+                injector.check(sweep)
+            except Exception as e:
+                # die like a preempted pod: hard exit, no jax.distributed
+                # shutdown handshake, no atexit drains — only committed
+                # checkpoints survive, which is exactly what the launcher's
+                # restart policy resumes from
+                print(f"injected failure at sweep {sweep}: {e}", flush=True)
+                os._exit(1)
     dt = time.time() - t0
     swept = engine.num_sweeps_done - resumed_at  # only what this process ran
     updates = (coo.num_users + coo.num_movies) * swept
-    print(
+    say(
         f"final rmse(avg)={engine.rmse:.4f} after {engine.num_sweeps_done} sweeps "
         f"({swept} this run) in {dt:.2f}s ({updates / max(dt, 1e-9):,.0f} item updates/s)"
     )
     if args.export_artifact:
+        # collective in a multi-process job (peers hit the export barrier);
+        # only process 0 writes and reports
         path = engine.export(args.export_artifact)
-        print(f"exported serving artifact to {path}")
+        say(f"exported serving artifact to {path}")
     return 0
 
 

@@ -43,3 +43,28 @@ def bpmf_ring_from(mesh: Mesh) -> Mesh:
     ranks onto one logical ring; ICI neighbors stay adjacent)."""
     devices = np.asarray(mesh.devices).reshape(-1)
     return Mesh(devices, ("ring",))
+
+
+def bpmf_ring(num_shards: int = 0) -> Mesh:
+    """Process-spanning BPMF ring over the first ``num_shards`` global devices.
+
+    ``jax.devices()`` is global and process-major, so after
+    ``hostdevices.init_multiprocess`` this one mesh covers every process's
+    devices in coordinator order and the ring sweep blocks compile
+    unchanged — the logical mesh, and hence the per-shard SPMD program, is
+    identical whether 8 shards live in one process or 4+4 in two.
+
+    ``num_shards == 0`` means all global devices. A multi-process job must
+    use all of them: a sub-ring would leave some processes outside the mesh,
+    which ``shard_map`` cannot express.
+    """
+    devices = jax.devices()
+    n = num_shards or len(devices)
+    if n > len(devices):
+        raise ValueError(f"num_shards={n} exceeds {len(devices)} global devices")
+    if jax.process_count() > 1 and n != len(devices):
+        raise ValueError(
+            f"multi-process runs must ring all {len(devices)} global devices "
+            f"(got num_shards={n}); adjust --devices per process instead"
+        )
+    return Mesh(np.asarray(devices[:n]), ("ring",))

@@ -1,3 +1,3 @@
-from repro.runtime.elastic import ElasticRunner, FailureInjector
+from repro.runtime.elastic import FailureInjector, NodeFailure, RestartPolicy, StepTimer
 
-__all__ = ["ElasticRunner", "FailureInjector"]
+__all__ = ["FailureInjector", "NodeFailure", "RestartPolicy", "StepTimer"]

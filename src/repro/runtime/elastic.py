@@ -1,38 +1,35 @@
-"""Elastic training runtime: failure injection, mesh shrink/grow, restore.
+"""Elastic training runtime: failure injection, restart policy, watchdog.
 
 At 1000+ node scale the failure model is "some pod is always down". The
-runtime mechanism demonstrated here (and exercised in
-tests/test_elastic.py on CPU host devices):
+pieces here are what the launch layer composes into a preemption-safe run
+(DESIGN.md §14, exercised by ``scripts/launch_multiproc.py`` and
+tests/test_multiproc.py):
 
-  1. a ``FailureInjector`` raises :class:`NodeFailure` at configured steps
-     (standing in for the cluster health-checker);
-  2. the :class:`ElasticRunner` catches it, rebuilds the mesh over the
-     surviving device set (any count — sharding specs are resolved against
-     the *new* mesh, with non-divisible dims falling back per module.py),
-  3. restores the last committed checkpoint directly onto the new mesh
-     (checkpoint.py's elastic read path), and
-  4. re-jits the step function and continues from the restored step.
-
-Straggler mitigation: SPMD has no per-device work queues, so the paper's
-work-stealing maps to (a) static cost-model balancing (core/balance.py,
-applied per-shard before compile) and (b) the ``StepTimer`` watchdog that
-flags slow steps so the orchestration layer can evict a slow host between
-checkpoints — the standard TPU-fleet remediation.
+* :class:`FailureInjector` raises :class:`NodeFailure` at configured sweeps
+  (standing in for the cluster health-checker). ``repro.launch.bpmf``
+  exposes it as ``--inject-failure`` so a test launcher can kill one
+  process of a live multi-process job deterministically.
+* :class:`RestartPolicy` decides how the job comes back up after a process
+  dies: one fewer process, same **global** device count. The checkpointed
+  ring carries are sharded over S global devices, and S is what the
+  compiled sweep blocks were specialized to — so a restart must re-split
+  the same S across the survivors and let the checkpoint layer reshard
+  the saved carry onto the new process-spanning mesh (checkpoint.py's
+  ``make_array_from_callback`` read path).
+* :class:`StepTimer` is the straggler watchdog: SPMD has no per-device
+  work queues, so the paper's work-stealing maps to (a) static cost-model
+  balancing (core/balance.py, applied per-shard before compile) and
+  (b) flagging slow sweeps so the orchestration layer can evict a slow
+  host between checkpoints — the standard TPU-fleet remediation.
+  ``repro.launch.bpmf`` records every sweep through one.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Optional, Sequence
 
-import jax
 import numpy as np
-from jax.sharding import Mesh
 
-from repro.checkpoint.manager import CheckpointManager
 from repro.utils import logger
-
-Tree = Any
 
 
 class NodeFailure(RuntimeError):
@@ -55,6 +52,45 @@ class FailureInjector:
             raise NodeFailure(lost)
 
 
+@dataclasses.dataclass
+class RestartPolicy:
+    """How a preempted multi-process job restarts at a smaller size.
+
+    The invariant is the global device count ``total_devices`` (= the ring
+    shard count S): compiled sweep blocks, checkpointed carries and the
+    data partition are all specialized to S, so a restart keeps S fixed
+    and re-splits it over fewer processes. ``scripts/launch_multiproc.py``
+    consults this after a child dies and respawns the survivors with
+    ``--resume`` from the last committed checkpoint.
+    """
+
+    total_devices: int
+    min_processes: int = 1
+    max_restarts: int = 2
+    restarts_done: int = 0
+
+    def next_layout(self, num_processes: int) -> tuple[int, int] | None:
+        """Layout after losing a process: ``(processes, devices_per_process)``.
+
+        Picks the largest process count below ``num_processes`` that still
+        divides ``total_devices`` evenly (S preserved exactly). Returns
+        None when the restart budget is spent or no such count exists —
+        the job then fails for real.
+        """
+        if self.restarts_done >= self.max_restarts:
+            return None
+        for procs in range(num_processes - 1, self.min_processes - 1, -1):
+            if procs >= 1 and self.total_devices % procs == 0:
+                self.restarts_done += 1
+                logger.warning(
+                    "elastic restart %d/%d: %d -> %d processes x %d devices",
+                    self.restarts_done, self.max_restarts,
+                    num_processes, procs, self.total_devices // procs,
+                )
+                return procs, self.total_devices // procs
+        return None
+
+
 class StepTimer:
     """Rolling step-time stats; flags stragglers (> threshold x median)."""
 
@@ -73,74 +109,3 @@ class StepTimer:
             self.straggler_steps.append(step)
             logger.warning("step %d straggled: %.3fs vs median %.3fs", step, seconds, med)
         return slow
-
-
-@dataclasses.dataclass
-class ElasticRunner:
-    """Drives a train loop that survives device loss.
-
-    ``make_mesh(devices)``      — build a mesh over the surviving devices.
-    ``make_step(mesh)``         — (re)build the jitted step for a mesh.
-    ``make_state(mesh, target)``— init or restore state on a mesh; receives
-                                  the abstract target (ShapeDtypeStructs).
-    ``make_batch(step, mesh)``  — produce the (host) batch for a step.
-    """
-
-    make_mesh: Callable[[Sequence[jax.Device]], Mesh]
-    make_step: Callable[[Mesh], Callable]
-    abstract_state: Tree
-    shardings_for: Callable[[Mesh], Tree]
-    make_batch: Callable[[int, Mesh], Any]
-    init_state: Callable[[Mesh], Tree]
-    manager: CheckpointManager
-    checkpoint_every: int = 10
-    injector: Optional[FailureInjector] = None
-    timer: StepTimer = dataclasses.field(default_factory=StepTimer)
-
-    def run(self, num_steps: int, devices: Optional[list] = None) -> tuple[Tree, dict]:
-        devices = list(devices if devices is not None else jax.devices())
-        mesh = self.make_mesh(devices)
-        step_fn = self.make_step(mesh)
-
-        start = self.manager.latest()
-        if start is None:
-            state = self.init_state(mesh)
-            start = 0
-        else:
-            state = self.manager.restore(
-                self.abstract_state, mesh=mesh, shardings=self.shardings_for(mesh)
-            )
-        events: list[str] = []
-
-        step = start
-        while step < num_steps:
-            try:
-                if self.injector is not None:
-                    self.injector.check(step)
-                t0 = time.perf_counter()
-                state, metrics = step_fn(state, self.make_batch(step, mesh))
-                jax.block_until_ready(metrics)
-                self.timer.record(step, time.perf_counter() - t0)
-                step += 1
-                if step % self.checkpoint_every == 0:
-                    self.manager.save(step, state)
-            except NodeFailure as e:
-                events.append(f"step {step}: {e}")
-                logger.warning("failure at step %d: %s — shrinking mesh", step, e)
-                devices = devices[: max(1, len(devices) - e.lost_devices)]
-                mesh = self.make_mesh(devices)
-                step_fn = self.make_step(mesh)
-                restored = self.manager.latest()
-                if restored is None:
-                    state = self.init_state(mesh)
-                    step = 0
-                else:
-                    state = self.manager.restore(
-                        self.abstract_state, mesh=mesh, shardings=self.shardings_for(mesh)
-                    )
-                    step = restored
-                logger.info("resumed at step %d on %d devices", step, len(devices))
-
-        self.manager.save(num_steps, state)
-        self.manager.wait()
-        return state, {"events": events, "straggler_steps": self.timer.straggler_steps}

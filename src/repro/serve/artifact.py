@@ -191,7 +191,14 @@ def save_artifact(directory: str, meta: ArtifactMeta, arrays: dict[str, np.ndarr
         if got != want:
             raise ValueError(f"artifact array {name}: shape {got} != {want} from meta")
     os.makedirs(directory, exist_ok=True)
-    save_checkpoint(directory, _ARRAYS_STEP, {k: np.asarray(arrays[k]) for k in ARRAY_KEYS})
+    # non-collective: in a multi-process job only process 0 exports, from
+    # already-gathered host arrays — no cross-process commit protocol
+    save_checkpoint(
+        directory,
+        _ARRAYS_STEP,
+        {k: np.asarray(arrays[k]) for k in ARRAY_KEYS},
+        collective=False,
+    )
     tmp = os.path.join(directory, f".{_ARTIFACT_JSON}-{secrets.token_hex(4)}")
     with open(tmp, "w") as f:
         json.dump(meta.to_json(), f, indent=1)

@@ -1,12 +1,10 @@
-"""Elastic runtime: failure injection -> mesh shrink -> restore -> continue."""
+"""Elastic runtime: failure injection, restart layout policy, watchdog."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import CheckpointManager
-from repro.runtime.elastic import ElasticRunner, FailureInjector, NodeFailure, StepTimer
+from repro.runtime.elastic import FailureInjector, NodeFailure, RestartPolicy, StepTimer
 
 
 def test_step_timer_flags_stragglers():
@@ -29,39 +27,64 @@ def test_failure_injector():
     inj.check(3)  # consumed — does not re-fire
 
 
-def test_elastic_runner_survives_failure(tmp_path):
-    """Train a toy model; kill 'devices' mid-run; resume from checkpoint."""
-    from jax.sharding import Mesh
+def test_restart_policy_preserves_global_device_count():
+    pol = RestartPolicy(total_devices=8, max_restarts=3)
+    # 4 procs x 2 dev -> 2 procs x 4 dev (3 does not divide 8)
+    assert pol.next_layout(4) == (2, 4)
+    assert pol.next_layout(2) == (1, 8)
+    # every layout re-splits the same 8 global devices
+    assert pol.restarts_done == 2
 
-    def make_mesh(devices):
-        return Mesh(np.array(devices), ("data",))
 
-    w0 = jnp.zeros((4, 4))
+def test_restart_policy_budget_and_floor():
+    pol = RestartPolicy(total_devices=4, max_restarts=1)
+    assert pol.next_layout(2) == (1, 4)
+    assert pol.next_layout(1) is None  # budget spent
 
-    def make_step(mesh):
-        @jax.jit
-        def step(state, batch):
-            w, n = state
-            grad = (w - batch).mean() * jnp.ones_like(w)
-            return (w - 0.1 * grad, n + 1), {"loss": jnp.mean((w - batch) ** 2)}
+    pol = RestartPolicy(total_devices=4, min_processes=2, max_restarts=5)
+    assert pol.next_layout(2) is None  # below the process floor
 
-        return step
+    pol = RestartPolicy(total_devices=7, max_restarts=5)
+    assert pol.next_layout(7) == (1, 7)  # only 1 divides 7
 
-    abstract = jax.eval_shape(lambda: (w0, jnp.zeros((), jnp.int32)))
-    manager = CheckpointManager(str(tmp_path), keep=3, async_writes=False)
-    runner = ElasticRunner(
-        make_mesh=make_mesh,
-        make_step=make_step,
-        abstract_state=abstract,
-        shardings_for=lambda mesh: None,
-        make_batch=lambda step, mesh: jnp.full((4, 4), float(step % 3)),
-        init_state=lambda mesh: (w0, jnp.zeros((), jnp.int32)),
-        manager=manager,
-        checkpoint_every=5,
-        injector=FailureInjector({12: 0}),  # lose 0 devices (still restarts from ckpt)
+
+def test_restart_policy_restart_continues_bitwise(tmp_path):
+    """Kill a run mid-stream; restore from the last committed checkpoint and
+    finish — samples must match an uninterrupted run (the in-process half of
+    the elastic story; the cross-process-count half is tests/test_multiproc)."""
+    from repro.bpmf import BPMFConfig, BPMFEngine
+    from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+
+    coo, _ = synthetic_ratings(
+        SyntheticSpec(num_users=48, num_movies=32, nnz=600, discretize=False)
     )
-    state, info = runner.run(20)
-    assert int(state[1]) == 20
-    assert len(info["events"]) == 1
-    assert "step 12" in info["events"][0]
-    assert manager.latest() == 20
+
+    def cfg(ckdir):
+        return BPMFConfig().replace(
+            name="sequential", K=4, num_sweeps=6, burn_in=2,
+            sweeps_per_block=1, checkpoint_dir=str(ckdir),
+            checkpoint_every=2, async_checkpoint_writes=False,
+        )
+
+    ref = BPMFEngine(cfg(tmp_path / "ref"))
+    ref.prepare(coo)
+    for _ in ref.sample():
+        pass
+    U_ref, V_ref = ref.factors()
+
+    inj = FailureInjector({4: 1})
+    eng = BPMFEngine(cfg(tmp_path / "elastic"))
+    eng.prepare(coo)
+    with pytest.raises(NodeFailure):
+        for m in eng.sample():
+            inj.check(int(m.sweep))
+
+    eng2 = BPMFEngine(cfg(tmp_path / "elastic"))
+    eng2.prepare(coo)
+    resumed = eng2.restore()
+    assert 0 < resumed < 6
+    for _ in eng2.sample():
+        pass
+    U, V = eng2.factors()
+    np.testing.assert_array_equal(np.asarray(U), np.asarray(U_ref))
+    np.testing.assert_array_equal(np.asarray(V), np.asarray(V_ref))

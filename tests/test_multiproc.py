@@ -1,0 +1,296 @@
+"""Multi-process training (DESIGN.md §14): parity, loading, elasticity.
+
+Every test here spawns a gang of OS processes joined into one jax job via
+the ``REPRO_*`` environment (the same wiring ``scripts/launch_multiproc.py``
+uses) and asserts the tentpole claims of the multi-process refactor:
+
+  * a ring mesh spanning 2 processes x 4 devices draws bitwise the samples
+    of 1 process x 8 devices (``ring`` and ``ring_async``);
+  * per-host data loading computes the identical global plan on every
+    process while materializing only the local shards (allocation guard:
+    ``local_nnz < total_nnz`` on every process of a multi-process job);
+  * a checkpoint written at one process count restores at another, both
+    directions, with bitwise-continued sweeps;
+  * killing one process mid-run triggers the launcher's elastic restart at
+    a smaller process count that finishes from the last committed
+    checkpoint with the same samples.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import signal
+import socket
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = [pytest.mark.multidevice]
+
+# Worker run by every gang member: engine run / checkpoint phases, RESULT
+# line (hashes of gathered factors, history, exported artifact) from p0.
+ENGINE_WORKER = """
+import hashlib, json, os, sys
+
+pid, nproc, port, ndev = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3], int(sys.argv[4])
+ckdir, phase, backend, depth = sys.argv[5], sys.argv[6], sys.argv[7], int(sys.argv[8])
+
+if nproc > 1:
+    os.environ["REPRO_COORDINATOR"] = f"127.0.0.1:{port}"
+    os.environ["REPRO_NUM_PROCESSES"] = str(nproc)
+    os.environ["REPRO_PROCESS_ID"] = str(pid)
+from repro.launch.hostdevices import init_multiprocess
+init_multiprocess(local_devices=ndev)
+import jax
+import numpy as np
+from repro.bpmf import BPMFConfig, BPMFEngine
+from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+
+assert len(jax.devices()) == nproc * ndev, (len(jax.devices()), nproc, ndev)
+coo, _ = synthetic_ratings(
+    SyntheticSpec(num_users=96, num_movies=64, nnz=1500, discretize=False)
+)
+cfg = BPMFConfig().replace(
+    name=backend, K=8, num_sweeps=4 if phase == "start" else 8, burn_in=2,
+    sweeps_per_block=2, pipeline_depth=depth, checkpoint_dir=ckdir,
+    checkpoint_every=2, keep_factor_samples=2,
+)
+eng = BPMFEngine(cfg)
+eng.prepare(coo)
+if phase == "resume":
+    resumed = eng.restore()
+    assert 0 < resumed < 8, resumed
+for _ in eng.sample():
+    pass
+
+def h(a):
+    return hashlib.md5(np.ascontiguousarray(a).tobytes()).hexdigest()[:12]
+
+U, V = eng.factors()
+hist = np.asarray(
+    [[m.rmse_sample, m.rmse_avg, m.sweep] for m in eng.history], np.float32
+)
+art = os.path.join(ckdir, f"art-{phase}")
+eng.export(art)  # collective: every process joins the export barrier
+if pid == 0:
+    arth = {}
+    for root, _, files in sorted(os.walk(art)):
+        for f in sorted(files):
+            p = os.path.join(root, f)
+            with open(p, "rb") as fh:
+                arth[os.path.relpath(p, art)] = hashlib.md5(fh.read()).hexdigest()[:12]
+    print("RESULT", json.dumps({
+        "U": h(U), "V": h(V), "hist": h(hist), "rmse": float(eng.rmse),
+        "art": arth,
+    }), flush=True)
+"""
+
+# Worker asserting the per-host loading contract: every process prints its
+# own PLAN line (global-plan fingerprint + local materialization counts).
+PLAN_WORKER = """
+import hashlib, json, os, sys
+
+pid, nproc, port, ndev = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3], int(sys.argv[4])
+if nproc > 1:
+    os.environ["REPRO_COORDINATOR"] = f"127.0.0.1:{port}"
+    os.environ["REPRO_NUM_PROCESSES"] = str(nproc)
+    os.environ["REPRO_PROCESS_ID"] = str(pid)
+from repro.launch.hostdevices import init_multiprocess
+init_multiprocess(local_devices=ndev)
+import numpy as np
+from repro.bpmf import BPMFConfig, BPMFEngine
+from repro.data.synthetic import SyntheticSpec, synthetic_ratings
+
+coo, _ = synthetic_ratings(
+    SyntheticSpec(num_users=96, num_movies=64, nnz=1500, discretize=False)
+)
+eng = BPMFEngine(BPMFConfig().replace(name="ring", K=8, num_sweeps=2, burn_in=1))
+eng.prepare(coo)
+plan = eng.backend.plan
+
+def h(a):
+    return hashlib.md5(np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()[:12]
+
+print("PLAN", json.dumps({
+    "pid": pid,
+    "u_perm": h(plan.part_users.perm), "v_perm": h(plan.part_movies.perm),
+    "u_cap": int(plan.part_users.cap), "v_cap": int(plan.part_movies.cap),
+    "num_shards": int(plan.num_shards),
+    "local_shards": list(plan.local_shards) if plan.local_shards else None,
+    "local_nnz": int(plan.local_nnz), "total_nnz": int(plan.total_nnz),
+}), flush=True)
+"""
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn_gang(worker: str, nproc: int, ndev: int, args: list[str],
+                tmp_path, timeout: int = 900) -> list[str]:
+    """Run ``worker`` as an nproc-gang; return per-process stdout."""
+    script = tmp_path / "worker.py"
+    script.write_text(textwrap.dedent(worker))
+    port = str(_free_port())
+    env = dict(os.environ)
+    env.pop("REPRO_COORDINATOR", None)
+    env.pop("REPRO_NUM_PROCESSES", None)
+    env.pop("REPRO_PROCESS_ID", None)
+    env["XLA_FLAGS"] = re.sub(
+        r"--xla_force_host_platform_device_count=\d+", "", env.get("XLA_FLAGS", "")
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    procs = [
+        subprocess.Popen(
+            [sys.executable, str(script), str(i), str(nproc), port, str(ndev), *args],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        )
+        for i in range(nproc)
+    ]
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=timeout)
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.send_signal(signal.SIGKILL)
+                p.wait()
+    bad = [(i, p.returncode) for i, p in enumerate(procs) if p.returncode != 0]
+    if bad:
+        dump = "\n".join(f"--- p{i} ---\n{o[-3000:]}" for i, o in enumerate(outs))
+        raise AssertionError(f"gang members failed {bad}:\n{dump}")
+    return outs
+
+
+def _result(outs: list[str]) -> dict:
+    for out in outs:
+        for line in out.splitlines():
+            if line.startswith("RESULT "):
+                return json.loads(line[len("RESULT "):])
+    raise AssertionError(f"no RESULT line in\n{outs[0][-3000:]}")
+
+
+@pytest.fixture(scope="module")
+def ring_single_ref(tmp_path_factory):
+    """Uninterrupted 1-proc x 8-dev ring run — the parity/restore oracle."""
+    tmp = tmp_path_factory.mktemp("ring-ref")
+    return _result(_spawn_gang(
+        ENGINE_WORKER, 1, 8, [str(tmp / "ck"), "run", "ring", "1"], tmp))
+
+
+@pytest.mark.parametrize("backend,depth", [("ring", 1), ("ring_async", 2)])
+def test_bitwise_parity_2x4_vs_1x8(backend, depth, tmp_path, ring_single_ref):
+    """The tentpole claim: one global program, any process split — a
+    2-proc x 4-dev gang draws bitwise the samples of 1 proc x 8 devs,
+    down to the exported artifact bytes."""
+    args = ["run", backend, str(depth)]
+    if backend == "ring":
+        single = ring_single_ref
+    else:
+        single = _result(_spawn_gang(
+            ENGINE_WORKER, 1, 8, [str(tmp_path / "ck1"), *args], tmp_path))
+    multi = _result(_spawn_gang(
+        ENGINE_WORKER, 2, 4, [str(tmp_path / "ck2"), *args], tmp_path))
+    assert multi["U"] == single["U"]
+    assert multi["V"] == single["V"]
+    assert multi["hist"] == single["hist"]
+    assert multi["rmse"] == single["rmse"]
+    assert multi["art"] == single["art"]
+
+
+def test_per_host_loading_identical_global_plans(tmp_path):
+    """Every process derives the same global partition plan from its own
+    pass over the data, while materializing only its local shards — no
+    process holds the full training set (the allocation guard)."""
+    outs = _spawn_gang(PLAN_WORKER, 2, 4, [], tmp_path, timeout=600)
+    plans = []
+    for out in outs:
+        lines = [l for l in out.splitlines() if l.startswith("PLAN ")]
+        assert len(lines) == 1, out[-2000:]
+        plans.append(json.loads(lines[0][len("PLAN "):]))
+    plans.sort(key=lambda p: p["pid"])
+
+    single = json.loads(
+        [l for l in _spawn_gang(PLAN_WORKER, 1, 8, [], tmp_path, timeout=600)[0]
+         .splitlines() if l.startswith("PLAN ")][0][len("PLAN "):]
+    )
+    for p in plans:
+        # the global plan (permutations, capacities, shard count) is
+        # process-invariant and equals the single-process build's
+        for k in ("u_perm", "v_perm", "u_cap", "v_cap", "num_shards"):
+            assert p[k] == single[k], (k, p, single)
+        # per-host materialization: only the local half of the ring ...
+        assert p["local_shards"] == list(range(p["pid"] * 4, p["pid"] * 4 + 4))
+        # ... and strictly fewer than the global ratings resident
+        assert 0 < p["local_nnz"] < p["total_nnz"]
+    assert plans[0]["local_nnz"] + plans[1]["local_nnz"] >= plans[0]["total_nnz"]
+
+
+@pytest.mark.parametrize("start,finish", [((2, 4), (1, 8)), ((1, 8), (2, 4))])
+def test_checkpoint_restores_across_process_counts(start, finish, tmp_path,
+                                                   ring_single_ref):
+    """A checkpoint written at one process count restores at another (both
+    directions) and the continued run is bitwise the uninterrupted one."""
+    ck = str(tmp_path / "ck")
+    _spawn_gang(ENGINE_WORKER, start[0], start[1], [ck, "start", "ring", "1"], tmp_path)
+    resumed = _result(_spawn_gang(
+        ENGINE_WORKER, finish[0], finish[1], [ck, "resume", "ring", "1"], tmp_path))
+    assert resumed["U"] == ring_single_ref["U"]
+    assert resumed["V"] == ring_single_ref["V"]
+    assert resumed["rmse"] == ring_single_ref["rmse"]
+    assert resumed["art"] == ring_single_ref["art"]
+
+
+def test_elastic_restart_after_killed_process(tmp_path):
+    """End-to-end preemption drill through scripts/launch_multiproc.py: an
+    injected failure hard-kills process 0 mid-run, the launcher's restart
+    policy respawns at a smaller process count over the same global device
+    total, and the resumed run finishes from the last committed checkpoint
+    with the same final posterior as an undisturbed run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    common = [
+        "--backend", "ring", "--dataset", "synthetic",
+        "--users", "96", "--movies", "64", "--nnz", "1500", "--K", "8",
+        "--sweeps", "6", "--burn-in", "2", "--sweeps-per-block", "2",
+    ]
+
+    def launch(extra_own, extra_fwd):
+        r = subprocess.run(
+            [sys.executable, os.path.join(REPO_ROOT, "scripts", "launch_multiproc.py"),
+             *extra_own, "--", *common, *extra_fwd],
+            env=env, capture_output=True, text=True, timeout=900,
+        )
+        return r
+
+    ref = launch(["--num-processes", "1", "--devices-per-process", "8",
+                  "--timeout", "600"], [])
+    assert ref.returncode == 0, ref.stdout[-3000:]
+    ref_final = re.search(r"final rmse\(avg\)=([0-9.]+)", ref.stdout)
+    assert ref_final, ref.stdout[-2000:]
+
+    ck = str(tmp_path / "ck")
+    r = launch(
+        ["--num-processes", "2", "--devices-per-process", "4",
+         "--elastic", "--max-restarts", "2", "--timeout", "600"],
+        ["--checkpoint-dir", ck, "--checkpoint-every", "2",
+         "--inject-failure", "4"],
+    )
+    assert r.returncode == 0, r.stdout[-4000:]
+    assert "injected failure at sweep 4" in r.stdout
+    assert "elastic restart: 1 processes x 8 devices" in r.stdout
+    final = re.search(r"final rmse\(avg\)=([0-9.]+)(?!.*final rmse)", r.stdout, re.S)
+    assert final, r.stdout[-2000:]
+    # the restarted run finishes with the undisturbed run's posterior
+    assert final.group(1) == ref_final.group(1), r.stdout[-2000:]
